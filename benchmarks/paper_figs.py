@@ -1,0 +1,131 @@
+"""One benchmark per paper figure (Figs. 2a/2b/2c, 4, 5, 6).
+
+Each returns a list of (name, value, derived) CSV rows.  Values are simulated
+wall-clock seconds to a fixed target accuracy (the paper's §VI metric), or
+best accuracy when a variant never reaches it.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.common import (base_exp, base_fl, run, time_to_acc, best_acc,
+                               N_CLIENTS, CONCURRENCY)
+
+TARGET = 0.60   # "tiny" dataset target (10 classes; ceiling ~0.65-0.73 —
+                # the paper likewise uses targets near the model ceiling,
+                # e.g. 70% on CIFAR-10, where stale-update damage shows)
+
+
+def _tta(result, target=TARGET):
+    t = time_to_acc(result["hist"], target)
+    return t if t is not None else float("inf")
+
+
+def _tail_acc(result, n=10):
+    accs = [h["acc"] for h in result["hist"] if "acc" in h][-n:]
+    return sum(accs) / max(len(accs), 1)
+
+
+def fig2a_buffer_size():
+    """Fig. 2a — wall-clock to target vs buffer size K; K=1 is fully async
+    (FedAsync regime), K=concurrency is synchronous."""
+    rows = []
+    for K in [1, 3, 6, CONCURRENCY]:
+        algo = "fedasync" if K == 1 else "seafl"
+        fl = base_fl(algo, buffer_size=K,
+                     staleness_limit=None if K == 1 else 10.0)
+        res = run(base_exp(fl), target=TARGET, max_rounds=400)
+        t = _tta(res)
+        rows.append((f"fig2a/K={K}", f"{t:.1f}",
+                     f"best_acc={res['best_acc']:.3f}"))
+    return rows
+
+
+def fig2b_staleness_limit():
+    """Fig. 2b — wall-clock to target vs staleness limit beta."""
+    rows = []
+    for beta in [1.0, 5.0, 10.0, None]:
+        fl = base_fl("seafl", staleness_limit=beta)
+        res = run(base_exp(fl), target=TARGET, max_rounds=400)
+        rows.append((f"fig2b/beta={beta if beta is not None else 'inf'}",
+                     f"{_tta(res):.1f}", f"best_acc={res['best_acc']:.3f}"))
+    return rows
+
+
+def fig2c_importance():
+    """Fig. 2c — importance weighting (s_t) on/off."""
+    rows = []
+    for use_imp in [True, False]:
+        fl = base_fl("seafl", use_importance=use_imp)
+        res = run(base_exp(fl), max_rounds=80)
+        rows.append((f"fig2c/importance={'on' if use_imp else 'off'}",
+                     f"{_tta(res):.1f}",
+                     f"best_acc={res['best_acc']:.4f};"
+                     f"tail_acc={_tail_acc(res):.4f}"))
+    return rows
+
+
+def fig4_alpha_mu():
+    """Fig. 4 — (alpha, mu) grid; paper's optimum is (3, 1)."""
+    rows = []
+    for alpha, mu in [(1.0, 1.0), (3.0, 1.0), (5.0, 1.0), (3.0, 3.0),
+                      (1.0, 3.0), (10.0, 1.0)]:
+        fl = base_fl("seafl", alpha=alpha, mu=mu)
+        res = run(base_exp(fl), max_rounds=80)
+        rows.append((f"fig4/alpha={alpha}_mu={mu}", f"{_tta(res):.1f}",
+                     f"best_acc={res['best_acc']:.4f};"
+                     f"tail_acc={_tail_acc(res):.4f}"))
+    return rows
+
+
+def fig5_baselines():
+    """Fig. 5 — SEAFL vs FedBuff / FedAsync / FedAvg on the three datasets
+    (reduced variants of the paper's EMNIST/CIFAR-10/CINIC-10 pairings).
+    Pareto heavy-tailed speeds as in §VI."""
+    rows = []
+    datasets = [("tiny", "mlp", 0.62), ("emnist-like", "lenet5_small", 0.30)]
+    for ds, model, target in datasets:
+        for algo, beta in [("seafl", 10.0), ("seafl", None),
+                           ("fedbuff", None), ("fedasync", None),
+                           ("fedavg", None)]:
+            fl = base_fl(algo, staleness_limit=beta)
+            cfg = base_exp(fl, dataset=ds, speed="pareto")
+            if model != "mlp":
+                cfg = replace(cfg, model=model, n_train=2000, n_test=400)
+            res = run(cfg, target=target, max_rounds=250)
+            tag = algo if beta is not None or algo != "seafl" else "seafl-inf"
+            tag = "seafl-b10" if (algo == "seafl" and beta == 10.0) else tag
+            rows.append((f"fig5/{ds}/{tag}", f"{_tta(res, target):.1f}",
+                         f"best_acc={res['best_acc']:.3f}"))
+    return rows
+
+
+def fig6_partial_training():
+    """Fig. 6 — SEAFL² (partial training) vs SEAFL and FedBuff at a low
+    staleness limit (6a) and in a high-turnover regime (6b)."""
+    rows = []
+    # (a) low staleness limit: notifications fire often
+    for algo, beta, tag in [("seafl2", 3.0, "seafl2-b3"),
+                            ("seafl", 3.0, "seafl-b3"),
+                            ("fedbuff", None, "fedbuff")]:
+        fl = base_fl(algo, staleness_limit=beta)
+        res = run(base_exp(fl, speed="pareto"), target=0.65, max_rounds=300)
+        rows.append((f"fig6a/{tag}", f"{_tta(res, 0.65):.1f}",
+                     f"best_acc={res['best_acc']:.3f}"))
+    # (b) high turnover (small local data -> fast local rounds): the paper
+    # observes the SEAFL² advantage shrinking
+    for algo, beta, tag in [("seafl2", 12.0, "seafl2-b12"),
+                            ("fedbuff", None, "fedbuff")]:
+        fl = base_fl(algo, staleness_limit=beta, local_epochs=1)
+        cfg = base_exp(fl, speed="pareto")
+        cfg = replace(cfg, n_train=1200)       # ~3% shards as in CINIC-10
+        res = run(cfg, target=0.40, max_rounds=300)
+        rows.append((f"fig6b/{tag}", f"{_tta(res, 0.40):.1f}",
+                     f"best_acc={res['best_acc']:.3f}"))
+    return rows
+
+
+ALL_FIGS = [fig2a_buffer_size, fig2b_staleness_limit, fig2c_importance,
+            fig4_alpha_mu, fig5_baselines, fig6_partial_training]

@@ -1,0 +1,63 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV.  Sections:
+  fig2a/2b/2c, fig4, fig5, fig6   — paper-figure reproductions (simulated
+                                    wall-clock seconds to target accuracy)
+  kernel/*                        — kernel micro-benchmarks + structural
+                                    roofline accounting
+  roofline/*                      — per (arch x shape) roofline terms from
+                                    the multi-pod dry-run artifacts
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only figs|kernels|roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=["figs", "kernels", "roofline"],
+                    default=None)
+    args = ap.parse_args()
+    print("name,value,derived")
+
+    t0 = time.time()
+    if args.only in (None, "figs"):
+        from benchmarks.paper_figs import ALL_FIGS
+        for fig in ALL_FIGS:
+            try:
+                for name, value, derived in fig():
+                    print(f"{name},{value},{derived}", flush=True)
+            except Exception as e:
+                traceback.print_exc()
+                print(f"{fig.__name__},ERROR,{type(e).__name__}", flush=True)
+
+    if args.only in (None, "kernels"):
+        from benchmarks.kernel_bench import ALL_KERNEL_BENCHES
+        for bench in ALL_KERNEL_BENCHES:
+            try:
+                for name, value, derived in bench():
+                    print(f"{name},{value},{derived}", flush=True)
+            except Exception as e:
+                traceback.print_exc()
+                print(f"{bench.__name__},ERROR,{type(e).__name__}", flush=True)
+
+    if args.only in (None, "roofline"):
+        try:
+            from benchmarks.roofline import csv_rows
+            for name, value, derived in csv_rows():
+                print(f"{name},{value},{derived}", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            print(f"roofline,ERROR,{type(e).__name__}", flush=True)
+
+    print(f"total_benchmark_wall_seconds,{time.time() - t0:.1f},",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Fault tolerance demo: client crashes + server checkpoint/restart.
+
+1. Trains under SEAFL² with a 15% per-dispatch client crash rate — the
+   scheduler replaces dead clients and keeps the target concurrency.
+2. Checkpoints the full server state (params, version history, staleness
+   table, rng) mid-run, simulates a server loss, restores into a *fresh*
+   process-state server and continues training.
+
+  PYTHONPATH=src python examples/elastic_failover.py
+"""
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.checkpoint import Checkpointer
+from repro.core.server import FLConfig
+from repro.experiment import ExperimentConfig, build_experiment
+from repro.runtime.simulator import SimConfig
+
+
+def make_cfg(fail_prob=0.15):
+    return ExperimentConfig(
+        dataset="tiny", n_train=1600, n_test=320, model="mlp",
+        dirichlet_alpha=0.5,
+        fl=FLConfig(algorithm="seafl2", n_clients=16, concurrency=8,
+                    buffer_size=4, staleness_limit=5.0, local_epochs=3,
+                    local_lr=0.1, batch_size=32, seed=9),
+        sim=SimConfig(speed_model="pareto", fail_prob=fail_prob,
+                      recover_after=10.0, seed=9),
+        seed=9,
+    )
+
+
+def main():
+    cfg = make_cfg()
+    sim, model, _ = build_experiment(cfg)
+    print("phase 1: training with 15% client crash rate ...")
+    sim.run(max_rounds=10)
+    for h in sim.history[-3:]:
+        print(f"  [round {h['round']:2d}] t={h['time']:7.1f}s "
+              f"acc={h.get('acc', float('nan')):.3f}")
+
+    ckdir = tempfile.mkdtemp(prefix="seafl_ck_")
+    ck = Checkpointer(ckdir, keep=2, async_save=False)
+    ck.save(sim.server.round, sim.server.checkpoint_trees(),
+            extra=sim.server.state_dict())
+    print(f"\ncheckpointed server at round {sim.server.round} -> {ckdir}")
+
+    print("simulating server loss; restoring into a fresh server ...")
+    sim2, _, _ = build_experiment(cfg)          # brand-new state
+    step, trees, extra = ck.restore()
+    sim2.server.load_state(extra, trees)
+    p_old = np.asarray(list(sim.server.params.values())[0]["w"]) \
+        if isinstance(list(sim.server.params.values())[0], dict) else None
+    print(f"restored at round {sim2.server.round} "
+          f"(rng + staleness table + {len(trees)} param versions)")
+
+    sim2.run(max_rounds=sim2.server.round + 8)
+    for h in sim2.history[-3:]:
+        print(f"  [round {h['round']:2d}] t={h['time']:7.1f}s "
+              f"acc={h.get('acc', float('nan')):.3f}")
+    best = max((h.get("acc", 0) for h in sim2.history), default=0)
+    print(f"\nresumed training reached acc={best:.3f} — crash/restart is "
+          f"transparent to the SEAFL protocol (staleness bookkeeping "
+          f"survives the restore).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""SEAFL² selective/partial training demo (paper §IV-C, Fig. 3 + Fig. 6).
+
+Runs the same heavy-tailed cluster twice — SEAFL (sync-wait for over-stale
+stragglers) vs SEAFL² (NOTIFY -> upload after the current epoch) — and shows
+where the wall-clock goes: SEAFL² stragglers upload partial updates (fewer
+than E epochs) instead of blocking the round.
+
+  PYTHONPATH=src python examples/partial_training.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.server import FLConfig
+from repro.experiment import ExperimentConfig, run_experiment
+from repro.runtime.simulator import SimConfig
+
+
+def run(algorithm):
+    cfg = ExperimentConfig(
+        dataset="tiny", n_train=2000, n_test=400, model="mlp",
+        dirichlet_alpha=0.5,
+        fl=FLConfig(algorithm=algorithm, n_clients=20, concurrency=10,
+                    buffer_size=5, staleness_limit=3.0, local_epochs=5,
+                    local_lr=0.1, batch_size=32, seed=4),
+        sim=SimConfig(speed_model="pareto", base_epoch_time=1.0, seed=4),
+        seed=4,
+    )
+    sim, hist = run_experiment(cfg, max_rounds=25)
+    return sim, hist
+
+
+def main():
+    print("running SEAFL  (sync-wait for over-stale stragglers)...")
+    sim1, h1 = run("seafl")
+    print("running SEAFL² (partial training via NOTIFY)...\n")
+    sim2, h2 = run("seafl2")
+
+    print(f"{'':14} {'rounds':>7} {'sim wall-clock':>15} {'best acc':>9}")
+    for name, sim, hist in [("SEAFL", sim1, h1), ("SEAFL²", sim2, h2)]:
+        best = max((h.get("acc", 0) for h in hist), default=0)
+        print(f"{name:14} {hist[-1]['round']:7d} {hist[-1]['time']:14.1f}s "
+              f"{best:9.3f}")
+    speedup = h1[-1]["time"] / h2[-1]["time"]
+    print(f"\nSEAFL² finished the same number of rounds "
+          f"{speedup:.2f}x faster in simulated wall-clock — the paper "
+          f"reports up to ~22% time-to-accuracy gains from exactly this "
+          f"mechanism (Fig. 6a).")
+
+
+if __name__ == "__main__":
+    main()

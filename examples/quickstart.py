@@ -1,0 +1,40 @@
+"""Quickstart: SEAFL in ~60 seconds on synthetic non-IID image data.
+
+Builds the paper's setup at toy scale — 20 heterogeneous clients (Zipf idle
+times), Dirichlet non-IID shards, K=5 buffered semi-async aggregation with
+the adaptive staleness+similarity weights of Eqs. (4)-(8) — and runs it to a
+target accuracy, printing the accuracy-vs-simulated-wall-clock curve.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.server import FLConfig
+from repro.experiment import ExperimentConfig, run_experiment
+from repro.runtime.simulator import SimConfig
+
+
+def main():
+    cfg = ExperimentConfig(
+        dataset="tiny", n_train=2000, n_test=400, model="mlp",
+        dirichlet_alpha=0.5,
+        fl=FLConfig(algorithm="seafl", n_clients=20, concurrency=10,
+                    buffer_size=5, staleness_limit=10.0,
+                    alpha=3.0, mu=1.0, theta=0.8,   # paper Fig. 4 optimum
+                    local_epochs=3, local_lr=0.1, batch_size=32, seed=0),
+        sim=SimConfig(speed_model="zipf", seed=0),
+        seed=0,
+    )
+    sim, hist = run_experiment(cfg, max_rounds=40, target_acc=0.55)
+    print(f"{'round':>6} {'sim_time(s)':>12} {'staleness':>10} {'acc':>6}")
+    for h in hist:
+        print(f"{h['round']:6d} {h['time']:12.1f} {h['staleness_max']:10.0f} "
+              f"{h.get('acc', float('nan')):6.3f}")
+    t = sim.time_to_accuracy(0.55)
+    print(f"\nSEAFL reached 55% accuracy in {t:.0f} simulated seconds "
+          f"({sim.server.total_aggregations} aggregations).")
+
+
+if __name__ == "__main__":
+    main()

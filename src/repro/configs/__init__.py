@@ -1,0 +1,9 @@
+from repro.configs.base import (
+    ModelConfig, ShapeConfig, SHAPES, register, get_config, smoke_config,
+    list_configs, applicable_shapes,
+)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "register", "get_config",
+    "smoke_config", "list_configs", "applicable_shapes",
+]

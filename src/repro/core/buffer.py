@@ -1,0 +1,68 @@
+"""K-slot update buffer (Algorithm 1 'Server stores received updates').
+
+Host-side metadata + lazily stacked device pytrees.  In cohort mode the
+stacked leaves carry a leading K axis that shards over the 'pod' mesh axis
+(updates stay resident where they were produced; aggregation is a weighted
+reduction over that axis — see sharding.DEFAULT_RULES['buffer']).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_stack
+
+PyTree = Any
+
+
+@dataclass
+class Update:
+    client_id: int
+    params: PyTree            # w_t^k   (client model after local training)
+    delta: PyTree             # Delta_t^k = w_t^k - w_{t_k}^g
+    n_samples: int
+    version: int              # t_k — round at which the client got the model
+    n_epochs: int             # epochs actually completed (< E under SEAFL²)
+    recv_time: float = 0.0
+    meta: dict = field(default_factory=dict)
+
+
+class UpdateBuffer:
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._slots: list[Update] = []
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    @property
+    def full(self) -> bool:
+        return len(self._slots) >= self.capacity
+
+    def add(self, u: Update) -> None:
+        self._slots.append(u)
+
+    def updates(self) -> list[Update]:
+        return list(self._slots)
+
+    def staleness(self, current_round: int) -> jnp.ndarray:
+        return jnp.asarray([current_round - u.version for u in self._slots],
+                           jnp.float32)
+
+    def data_sizes(self) -> jnp.ndarray:
+        return jnp.asarray([u.n_samples for u in self._slots], jnp.float32)
+
+    def stacked(self) -> tuple[PyTree, PyTree]:
+        """(stacked client params, stacked deltas) with leading K axis."""
+        return (tree_stack([u.params for u in self._slots]),
+                tree_stack([u.delta for u in self._slots]))
+
+    def drain(self) -> list[Update]:
+        out, self._slots = self._slots, []
+        return out
+
+    def client_ids(self) -> list[int]:
+        return [u.client_id for u in self._slots]

@@ -1,0 +1,273 @@
+"""Server-side policy state machine for SEAFL / SEAFL² and baselines.
+
+Time-free: the event-driven simulator (runtime/simulator.py) and the
+production cohort scheduler (launch/train.py) both drive this object, so the
+paper's protocol logic exists exactly once.
+
+Policies (paper §VI comparison set):
+  fedavg   — synchronous, waits for all M selected clients
+  fedasync — aggregate-on-arrival with polynomial staleness mixing
+  fedbuff  — buffer K, uniform-weight delta aggregation, no staleness limit
+  seafl    — buffer K + staleness limit (sync-wait) + adaptive weights (Eqs 4-8)
+  seafl2   — seafl + partial-training notifications (Algorithm 2)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.aggregation import (
+    SeaflHyper, seafl_aggregate, fedavg_aggregate, fedbuff_aggregate,
+    fedasync_aggregate,
+)
+from repro.core.buffer import Update, UpdateBuffer
+from repro.runtime.compression import ErrorFeedback, make_compressor
+from repro.utils import tree_add, tree_sub
+
+PyTree = Any
+
+ALGORITHMS = ("seafl", "seafl2", "fedbuff", "fedasync", "fedavg")
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    algorithm: str = "seafl"
+    n_clients: int = 100
+    concurrency: int = 20            # M: clients training at any time
+    buffer_size: int = 10            # K
+    staleness_limit: Optional[float] = 10.0   # beta; None = infinity
+    alpha: float = 3.0
+    mu: float = 1.0
+    theta: float = 0.8
+    local_epochs: int = 5            # E
+    local_lr: float = 0.05
+    batch_size: int = 32
+    use_importance: bool = True
+    use_staleness: bool = True
+    importance_mode: str = "delta_vs_global"   # paper Eq. 5
+    fedbuff_eta_g: float = 1.0
+    fedasync_alpha0: float = 0.6
+    fedasync_poly_a: float = 0.5
+    compression: Optional[str] = None   # None | 'topk:<ratio>' | 'int8'
+    seed: int = 0
+
+    def hyper(self) -> SeaflHyper:
+        beta = self.staleness_limit if self.staleness_limit is not None else 1e9
+        return SeaflHyper(alpha=self.alpha, mu=self.mu, beta=float(beta),
+                          theta=self.theta, use_importance=self.use_importance,
+                          use_staleness=self.use_staleness)
+
+
+@dataclass
+class AggregationEvent:
+    round: int
+    weights: Optional[np.ndarray]
+    staleness: Optional[np.ndarray]
+    contributors: list[int]
+    dispatch: list[int] = field(default_factory=list)
+    notify: list[int] = field(default_factory=list)
+
+
+class SeaflServer:
+    """Holds global params, buffer, version history, client activity state."""
+
+    def __init__(self, cfg: FLConfig, params: PyTree,
+                 client_sizes: dict[int, int]):
+        assert cfg.algorithm in ALGORITHMS, cfg.algorithm
+        self.cfg = cfg
+        self.params = params
+        self.round = 0
+        self.buffer = UpdateBuffer(self._trigger_size())
+        self.client_sizes = client_sizes
+        self.active: dict[int, int] = {}         # cid -> version t_k
+        self.idle: set[int] = set(client_sizes)
+        self._history: dict[int, PyTree] = {0: params}
+        self._notified: set[int] = set()
+        self._rng = np.random.default_rng(cfg.seed)
+        self.total_aggregations = 0
+        self.bytes_uploaded = 0
+        self._ef: dict[int, ErrorFeedback] = {}
+        self._compressor_spec = cfg.compression
+
+    # ------------------------------------------------------------- plumbing
+    def _trigger_size(self) -> int:
+        if self.cfg.algorithm == "fedavg":
+            return self.cfg.concurrency
+        if self.cfg.algorithm == "fedasync":
+            return 1
+        return self.cfg.buffer_size
+
+    def params_at(self, version: int) -> PyTree:
+        return self._history[version]
+
+    def staleness_of(self, cid: int) -> int:
+        return self.round - self.active[cid]
+
+    def _gc_history(self):
+        live = set(self.active.values()) | {self.round}
+        self._history = {v: p for v, p in self._history.items() if v in live}
+
+    def _sample_idle(self, k: int) -> list[int]:
+        pool = sorted(self.idle)
+        if not pool or k <= 0:
+            return []
+        pick = self._rng.choice(len(pool), size=min(k, len(pool)),
+                                replace=False)
+        return [pool[i] for i in pick]
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> list[int]:
+        """Initial dispatch: sample M clients for round 0."""
+        cids = self._sample_idle(self.cfg.concurrency)
+        for c in cids:
+            self.mark_dispatched(c)
+        return cids
+
+    def mark_dispatched(self, cid: int):
+        self.idle.discard(cid)
+        self.active[cid] = self.round
+        self._notified.discard(cid)
+
+    def mark_failed(self, cid: int):
+        """Client died mid-training: return a replacement dispatch if any."""
+        self.active.pop(cid, None)
+        # the dead client may rejoin the idle pool later (recovery)
+        repl = self._sample_idle(1)
+        for c in repl:
+            self.mark_dispatched(c)
+        return repl
+
+    def recover(self, cid: int):
+        if cid not in self.active:
+            self.idle.add(cid)
+
+    # --------------------------------------------------------------- policy
+    def _blocked_by_stale(self) -> bool:
+        """SEAFL sync-wait (paper §IV-B): hold aggregation while any
+        in-flight client's update would exceed the staleness limit."""
+        if self.cfg.algorithm not in ("seafl", "seafl2"):
+            return False
+        if self.cfg.staleness_limit is None:
+            return False
+        return any(self.round - v >= self.cfg.staleness_limit
+                   for v in self.active.values())
+
+    def clients_to_notify(self) -> list[int]:
+        """SEAFL² (Algorithm 2): in-flight clients at/over the limit get a
+        NOTIFY and will upload after their current epoch."""
+        if self.cfg.algorithm != "seafl2" or self.cfg.staleness_limit is None:
+            return []
+        out = [c for c, v in self.active.items()
+               if (self.round - v) >= self.cfg.staleness_limit
+               and c not in self._notified]
+        self._notified.update(out)
+        return out
+
+    # ----------------------------------------------------------- on_update
+    def on_update(self, cid: int, client_params: PyTree, n_epochs: int,
+                  recv_time: float = 0.0) -> Optional[AggregationEvent]:
+        version = self.active.pop(cid)
+        self.idle.add(cid)
+        base = self.params_at(version)
+        delta = tree_sub(client_params, base)
+        if self._compressor_spec:
+            # uplink ships the compressed delta; server reconstructs w_hat.
+            if cid not in self._ef:
+                self._ef[cid] = ErrorFeedback(
+                    make_compressor(self._compressor_spec))
+            delta, nbytes = self._ef[cid].roundtrip(delta)
+            self.bytes_uploaded += nbytes
+            client_params = tree_add(base, delta)
+        self.buffer.add(Update(
+            client_id=cid, params=client_params, delta=delta,
+            n_samples=self.client_sizes[cid], version=version,
+            n_epochs=n_epochs, recv_time=recv_time))
+
+        if len(self.buffer) >= self.buffer.capacity and not self._blocked_by_stale():
+            return self._aggregate(recv_time)
+        return None
+
+    # ----------------------------------------------------------- aggregate
+    def _aggregate(self, now: float) -> AggregationEvent:
+        cfg = self.cfg
+        updates = self.buffer.updates()
+        staleness = np.asarray([self.round - u.version for u in updates],
+                               np.float32)
+        sizes = np.asarray([u.n_samples for u in updates], np.float32)
+        weights = None
+
+        if cfg.algorithm == "fedavg":
+            stacked, _ = self.buffer.stacked()
+            self.params = fedavg_aggregate(stacked, sizes)
+            weights = np.asarray(sizes / sizes.sum())
+        elif cfg.algorithm == "fedasync":
+            u = updates[0]
+            self.params = fedasync_aggregate(
+                self.params, u.params, staleness[0],
+                cfg.fedasync_alpha0, cfg.fedasync_poly_a)
+        elif cfg.algorithm == "fedbuff":
+            _, deltas = self.buffer.stacked()
+            self.params = fedbuff_aggregate(self.params, deltas,
+                                            cfg.fedbuff_eta_g)
+            weights = np.full(len(updates), 1.0 / len(updates))
+        else:  # seafl / seafl2 — Eqs. (4)-(8)
+            stacked, deltas = self.buffer.stacked()
+            self.params, diag = seafl_aggregate(
+                self.params, stacked, deltas, sizes, staleness, cfg.hyper())
+            weights = np.asarray(diag["weights"])
+
+        contributors = self.buffer.client_ids()
+        self.buffer.drain()
+        self.round += 1
+        self.total_aggregations += 1
+        self._history[self.round] = self.params
+        self._gc_history()
+
+        # contributors + top-up to M go back to training on the new model
+        dispatch = list(dict.fromkeys(contributors))
+        for c in dispatch:
+            self.mark_dispatched(c)
+        top_up = self._sample_idle(self.cfg.concurrency - len(self.active))
+        for c in top_up:
+            self.mark_dispatched(c)
+        dispatch += top_up
+
+        return AggregationEvent(
+            round=self.round, weights=weights, staleness=staleness,
+            contributors=contributors, dispatch=dispatch,
+            notify=self.clients_to_notify())
+
+    # ------------------------------------------------------ fault tolerance
+    def state_dict(self) -> dict:
+        """JSON-able control state (params/history are saved separately via
+        the Checkpointer; buffer is drained at round boundaries so it is
+        empty at checkpoint time in the standard save path)."""
+        return {
+            "round": self.round,
+            "active": {str(k): int(v) for k, v in self.active.items()},
+            "idle": sorted(self.idle),
+            "notified": sorted(self._notified),
+            "total_aggregations": self.total_aggregations,
+            "bytes_uploaded": int(self.bytes_uploaded),
+            "rng": self._rng.bit_generator.state,
+            "history_versions": sorted(self._history),
+        }
+
+    def checkpoint_trees(self) -> dict:
+        """Pytrees that must be persisted: params at each live version."""
+        return {f"v{v}": p for v, p in self._history.items()}
+
+    def load_state(self, state: dict, trees: dict):
+        self.round = int(state["round"])
+        self.active = {int(k): int(v) for k, v in state["active"].items()}
+        self.idle = set(state["idle"])
+        self._notified = set(state["notified"])
+        self.total_aggregations = int(state["total_aggregations"])
+        self.bytes_uploaded = int(state.get("bytes_uploaded", 0))
+        self._rng = np.random.default_rng()
+        self._rng.bit_generator.state = state["rng"]
+        self._history = {int(k[1:]): v for k, v in trees.items()}
+        self.params = self._history[self.round]
+        self.buffer = UpdateBuffer(self._trigger_size())

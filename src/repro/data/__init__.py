@@ -1,0 +1,7 @@
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import (
+    make_image_dataset, make_lm_dataset, DATASETS,
+)
+
+__all__ = ["dirichlet_partition", "make_image_dataset", "make_lm_dataset",
+           "DATASETS"]

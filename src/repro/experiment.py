@@ -1,0 +1,85 @@
+"""Experiment harness: dataset -> clients -> server -> simulator.
+
+This is the programmatic entry point used by tests, benchmarks and examples
+for the paper-faithful simulation mode.  Production cohort mode lives in
+repro/launch/train.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.client import Client, make_epoch_fn
+from repro.core.server import FLConfig, SeaflServer
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_image_dataset, DATASETS
+from repro.models.cnn import MODELS
+from repro.runtime.simulator import FLSimulation, SimConfig
+
+
+@dataclass
+class ExperimentConfig:
+    dataset: str = "tiny"
+    model: Optional[str] = None          # default: dataset's paper model
+    n_train: int = 4000
+    n_test: int = 800
+    dirichlet_alpha: float = 0.3         # paper §III uses 0.3; §VI uses 5
+    fl: FLConfig = field(default_factory=FLConfig)
+    sim: SimConfig = field(default_factory=SimConfig)
+    eval_every: int = 1
+    seed: int = 0
+
+
+def build_experiment(cfg: ExperimentConfig):
+    """Returns (simulation, model, test_data)."""
+    train, test, meta = make_image_dataset(cfg.dataset, cfg.n_train,
+                                           cfg.n_test, seed=cfg.seed)
+    model_name, model_kw = DATASETS[cfg.dataset]
+    if cfg.model is not None:
+        model_name = cfg.model
+        if model_name == "mlp":
+            model_kw = dict(num_classes=meta["n_classes"],
+                            d_in=meta["img"] ** 2 * meta["channels"])
+        elif model_name.startswith("lenet"):
+            model_kw = dict(num_classes=meta["n_classes"],
+                            in_channels=meta["channels"], img=meta["img"])
+        else:
+            model_kw = dict(num_classes=meta["n_classes"],
+                            in_channels=meta["channels"])
+    model = MODELS[model_name](**model_kw)
+
+    parts = dirichlet_partition(train["y"], cfg.fl.n_clients,
+                                cfg.dirichlet_alpha, seed=cfg.seed)
+    epoch_fn = make_epoch_fn(model.loss)
+    clients = {
+        cid: Client(cid, {k: v[ix] for k, v in train.items()}, epoch_fn,
+                    n_samples=len(ix), batch_size=cfg.fl.batch_size,
+                    seed=cfg.seed)
+        for cid, ix in enumerate(parts)
+    }
+    params0 = model.init(jax.random.PRNGKey(cfg.seed))
+    server = SeaflServer(cfg.fl, params0,
+                         {cid: c.n_samples for cid, c in clients.items()})
+
+    test_j = {k: jnp.asarray(v) for k, v in test.items()}
+    acc_jit = jax.jit(model.accuracy)
+
+    def eval_fn(params):
+        return float(acc_jit(params, test_j))
+
+    sim = FLSimulation(server, clients, cfg.sim, eval_fn=eval_fn,
+                       eval_every=cfg.eval_every)
+    return sim, model, test
+
+
+def run_experiment(cfg: ExperimentConfig, max_time: float = 1e9,
+                   max_rounds: int = 500,
+                   target_acc: Optional[float] = None):
+    sim, model, _ = build_experiment(cfg)
+    history = sim.run(max_time=max_time, max_rounds=max_rounds,
+                      target_acc=target_acc)
+    return sim, history

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package contains:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, layout, dtype policy)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+On this CPU container kernels are validated with interpret=True; the
+XLA paths in models/ and core/ are the default execution route (see
+DESIGN.md §7 — hardware-adaptation notes).
+"""
+
+INTERPRET = True  # flipped to False on real TPU deployments

@@ -1,0 +1,37 @@
+"""jit'd wrapper: (B, S, H, D) layout, padding, residual-safe defaults."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import INTERPRET
+from repro.kernels.flash_attention.kernel import flash_attention_call
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    block_q=128, block_k=128, interpret=INTERPRET):
+    """Public API in model layout: q (B, Sq, H, D); k, v (B, Skv, KVH, D)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Skv))
+    pad_q = (-Sq) % bq
+    pad_k = (-Skv) % bk
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    o = flash_attention_call(qt, kt, vt, causal=causal, window=window,
+                             kv_len=Skv, block_q=bq, block_k=bk,
+                             interpret=interpret)
+    if pad_q:
+        o = o[:, :, :Sq]
+    return jnp.moveaxis(o, 1, 2)

@@ -1,0 +1,3 @@
+from repro.kernels.rglru.ops import rglru_scan
+
+__all__ = ["rglru_scan"]

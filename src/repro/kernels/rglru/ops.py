@@ -1,0 +1,29 @@
+"""jit'd wrapper with shape padding (pad decay=1, input=0 -> exact)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import INTERPRET
+from repro.kernels.rglru.kernel import rglru_scan_call
+
+
+@partial(jax.jit, static_argnames=("block_s", "block_c", "interpret"))
+def rglru_scan(a, b, h0=None, *, block_s=256, block_c=128, interpret=INTERPRET):
+    B, S, C = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, C), jnp.float32)
+    bs = min(block_s, S)
+    bc = min(block_c, C)
+    pad_s = (-S) % bs
+    pad_c = (-C) % bc
+    if pad_s or pad_c:
+        a = jnp.pad(a, ((0, 0), (0, pad_s), (0, pad_c)),
+                    constant_values=1.0)          # decay 1 keeps carry
+        b = jnp.pad(b, ((0, 0), (0, pad_s), (0, pad_c)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_c)))
+    h, h_last = rglru_scan_call(a, b, h0, block_s=bs, block_c=bc,
+                                interpret=interpret)
+    return h[:, :S, :C], h_last[:, :C]

@@ -1,0 +1,20 @@
+"""Sequential-scan oracle for the RG-LRU recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t.  a, b: (B, S, C); h0: (B, C) -> ((B,S,C), (B,C))."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), hT

@@ -1,0 +1,5 @@
+from repro.kernels.seafl_agg.ops import (
+    similarity_partials, weighted_aggregate, seafl_aggregate_flat,
+)
+
+__all__ = ["similarity_partials", "weighted_aggregate", "seafl_aggregate_flat"]

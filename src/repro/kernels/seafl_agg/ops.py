@@ -1,0 +1,64 @@
+"""jit'd public wrappers: padding, weight math, end-to-end fused aggregation."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import INTERPRET
+from repro.kernels.seafl_agg.kernel import (
+    similarity_partials_call, weighted_agg_call,
+)
+
+
+def _pad_to(x, m, axis=-1):
+    n = x.shape[axis]
+    pad = (-n) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("block_p", "interpret"))
+def similarity_partials(deltas, global_flat, block_p=2048, interpret=INTERPRET):
+    """(K, P), (P,) -> (K, 4) partial reductions (zero-padding is exact)."""
+    d = _pad_to(deltas, block_p, axis=1)
+    g = _pad_to(global_flat, block_p, axis=0)
+    return similarity_partials_call(d, g, block_p=block_p, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_p", "interpret"))
+def weighted_aggregate(weights, stacked, global_flat, theta,
+                       block_p=2048, interpret=INTERPRET):
+    P = global_flat.shape[0]
+    s = _pad_to(stacked, block_p, axis=1)
+    g = _pad_to(global_flat, block_p, axis=0)
+    out = weighted_agg_call(weights, s, g, theta, block_p=block_p,
+                            interpret=interpret)
+    return out[:P]
+
+
+@partial(jax.jit, static_argnames=("block_p", "interpret"))
+def seafl_aggregate_flat(global_flat, stacked_params, stacked_deltas,
+                         data_sizes, staleness, alpha, mu, beta, theta,
+                         block_p=2048, interpret=INTERPRET):
+    """Fully fused flat-buffer SEAFL aggregation (Eqs. 4-8).
+
+    Two HBM passes total: one over the deltas (partials), one over the
+    params (weighted mix).  Returns (new_global (P,), weights (K,)).
+    """
+    part = similarity_partials(stacked_deltas, global_flat,
+                               block_p=block_p, interpret=interpret)
+    cos = part[:, 0] * jax.lax.rsqrt(part[:, 1] * part[:, 2] + 1e-12)
+    gamma = alpha * beta / (staleness.astype(jnp.float32) + beta)
+    s = mu * (jnp.clip(cos, -1.0, 1.0) + 1.0) / 2.0
+    n = data_sizes.astype(jnp.float32)
+    n = n / jnp.maximum(jnp.sum(n), 1.0)
+    p = n * (gamma + s)
+    p = p / jnp.maximum(jnp.sum(p), 1e-12)
+    new_global = weighted_aggregate(p, stacked_params, global_flat, theta,
+                                    block_p=block_p, interpret=interpret)
+    return new_global, p

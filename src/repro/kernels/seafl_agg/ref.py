@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the seafl_agg kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def similarity_partials_ref(deltas, global_flat):
+    d = deltas.astype(jnp.float32)
+    g = global_flat.astype(jnp.float32)
+    dot = d @ g
+    dsq = jnp.sum(d * d, axis=1)
+    gsq = jnp.broadcast_to(jnp.sum(g * g), dot.shape)
+    return jnp.stack([dot, dsq, gsq, jnp.zeros_like(dot)], axis=1)
+
+
+def weighted_agg_ref(weights, stacked, global_flat, theta):
+    w = weights.astype(jnp.float32)
+    p = stacked.astype(jnp.float32)
+    g = global_flat.astype(jnp.float32)
+    return ((1.0 - theta) * g + theta * (w @ p)).astype(global_flat.dtype)
+
+
+def seafl_aggregate_flat_ref(global_flat, stacked, deltas, data_sizes,
+                             staleness, alpha, mu, beta, theta):
+    part = similarity_partials_ref(deltas, global_flat)
+    cos = part[:, 0] / jnp.sqrt(part[:, 1] * part[:, 2] + 1e-12)
+    gamma = alpha * beta / (staleness + beta)
+    s = mu * (jnp.clip(cos, -1, 1) + 1) / 2
+    n = data_sizes / jnp.maximum(jnp.sum(data_sizes), 1.0)
+    p = n * (gamma + s)
+    p = p / jnp.maximum(jnp.sum(p), 1e-12)
+    return weighted_agg_ref(p, stacked, global_flat, theta), p

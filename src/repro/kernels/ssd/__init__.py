@@ -1,0 +1,3 @@
+from repro.kernels.ssd.ops import ssd_forward
+
+__all__ = ["ssd_forward"]

@@ -1,0 +1,98 @@
+"""Mamba-2 SSD (state-space dual) chunked forward kernel.
+
+The TPU adaptation of SSD: the recurrence is reformulated per chunk of Q
+timesteps as three MXU matmuls (intra-chunk "attention" C B^T, the state
+contraction C S_prev, and the state update B^T X) plus cheap VPU decay
+scaling — exactly the block-decomposition of arXiv:2405.21060, tiled so the
+chunk working set (Q x max(hd, ds) tiles) sits in VMEM and the running state
+(hd x ds) persists in VMEM scratch across the innermost chunk dimension.
+
+Grid: (B, NH, n_chunks), chunks innermost (sequential carry).
+Inputs per (batch, head): x (S, hd), dt (S,), B/C (S, ds) shared across
+heads (n_groups=1, as in mamba2), per-head decay a (scalar).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, s_scr):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, hd)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0, 0]                              # scalar decay rate (negative)
+    Bm = b_ref[0].astype(jnp.float32)            # (Q, ds)
+    Cm = c_ref[0].astype(jnp.float32)            # (Q, ds)
+
+    dA = dt * a                                  # (Q,) negative
+    cum = jnp.cumsum(dA)                         # (Q,)
+
+    # intra-chunk: y_diag[q] = sum_{k<=q} (C_q.B_k) exp(cum_q - cum_k) dt_k x_k
+    seg = cum[:, None] - cum[None, :]            # (Q, Q)
+    Q = x.shape[0]
+    causal = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+              >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    w = scores * decay * dt[None, :]             # (Q, Q)
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_off[q] = exp(cum_q) * C_q . S_prev^T    (S_prev: (hd, ds))
+    s_prev = s_scr[...]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, s_prev, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # state update: S_new = exp(cum_Q) S_prev + X^T (B * dt * exp(cum_Q - cum))
+    wB = Bm * (dt * jnp.exp(cum[-1] - cum))[:, None]          # (Q, ds)
+    s_scr[...] = jnp.exp(cum[-1]) * s_prev + jax.lax.dot_general(
+        x, wB, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        state_ref[0, 0] = s_scr[...].astype(state_ref.dtype)
+
+
+def ssd_forward_call(x, dt, a, Bm, Cm, *, chunk=256, interpret=True):
+    """x: (B, NH, S, hd); dt: (B, NH, S); a: (NH,); Bm, Cm: (B, S, ds).
+    S % chunk == 0 (ops.py pads with dt=0 -> exact).
+    Returns (y (B, NH, S, hd), final_state (B, NH, hd, ds))."""
+    B, NH, S, hd = x.shape
+    ds = Bm.shape[-1]
+    grid = (B, NH, S // chunk)
+    kern = _ssd_kernel
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, ci: (b, h, ci)),
+            pl.BlockSpec((1, 1), lambda b, h, ci: (0, h)),
+            pl.BlockSpec((1, chunk, ds), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, h, ci: (b, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, hd, ds), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, NH, S, hd), x.dtype),
+            jax.ShapeDtypeStruct((B, NH, hd, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a[None, :], Bm, Cm)

@@ -1,0 +1,25 @@
+"""jit'd wrapper: padding (dt=0 on pads -> exact) and layout."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import INTERPRET
+from repro.kernels.ssd.kernel import ssd_forward_call
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_forward(x, dt, a, Bm, Cm, *, chunk=256, interpret=INTERPRET):
+    B, NH, S, hd = x.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_forward_call(x, dt, a, Bm, Cm, chunk=c,
+                                interpret=interpret)
+    return y[:, :, :S], state

@@ -1,0 +1,33 @@
+"""Sequential (per-timestep) oracle for the SSD recurrence.
+
+S_t = exp(dt_t a) S_{t-1} + dt_t (x_t  B_t^T);  y_t = S_t C_t
+This is the literal Mamba-2 SSM definition — clearly correct, O(S hd ds).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, Bm, Cm):
+    """x: (B, NH, S, hd); dt: (B, NH, S); a: (NH,); Bm/Cm: (B, S, ds)."""
+    B, NH, S, hd = x.shape
+    ds = Bm.shape[-1]
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+
+    def step(S_prev, inp):
+        xt, dtt, bt, ct = inp                         # (B,NH,hd), (B,NH), (B,ds), (B,ds)
+        decay = jnp.exp(dtt * a[None, :])             # (B, NH)
+        S_new = (decay[..., None, None] * S_prev
+                 + dtt[..., None, None] * xt[..., :, None] * bt[:, None, None, :])
+        y = jnp.einsum("bnhs,bs->bnh", S_new, ct)
+        return S_new, y
+
+    S0 = jnp.zeros((B, NH, hd, ds), jnp.float32)
+    S_final, ys = jax.lax.scan(
+        step, S0,
+        (jnp.moveaxis(x, 2, 0), jnp.moveaxis(dt, 2, 0),
+         jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(Cm.astype(jnp.float32), 1, 0)))
+    return jnp.moveaxis(ys, 0, 2), S_final            # (B,NH,S,hd), (B,NH,hd,ds)

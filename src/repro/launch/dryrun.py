@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below may now import jax and repro.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions the whole step),
+  * the per-device memory footprint fits (memory_analysis),
+  * and it extracts the roofline terms (cost_analysis FLOPs/bytes +
+    collective bytes parsed from the partitioned HLO).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --all                    # single-pod 16x16
+  python -m repro.launch.dryrun --all --multi-pod        # 2 x 16 x 16
+  python -m repro.launch.dryrun --all --agg              # + SEAFL agg cells
+Results land in benchmarks/results/dryrun/<cell>.json (incremental; --force
+re-runs).
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import (SHAPES, applicable_shapes, get_config,
+                           list_configs)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_agg_cell, build_cell
+from repro.sharding import axis_rules
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective kind (partitioned HLO)."""
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+([a-z\-]+)",
+                     line)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = next((c for c in _COLLECTIVES if op == c or op.startswith(c + ".")), None)
+        if kind is None:
+            continue
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += _shape_bytes(m.group(1))
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def memory_stats(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    out["total_bytes_per_device"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def cost_stats(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals", "optimal_seconds"):
+        if k in ca:
+            out[k.replace(" ", "_")] = float(ca[k])
+    return out
+
+
+def run_cell(cell, mesh) -> dict:
+    t0 = time.time()
+    with axis_rules(mesh):
+        jitted = jax.jit(cell.step_fn,
+                         in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    hlo = compiled.as_text()
+    from repro.launch.hlo_cost import analyze_hlo
+    rec = {
+        "cell": cell.name,
+        "mesh": {"shape": list(mesh.devices.shape),
+                 "axes": list(mesh.axis_names)},
+        "n_devices": int(mesh.devices.size),
+        "lower_seconds": round(t_lower, 2),
+        "compile_seconds": round(t_compile, 2),
+        "cost": cost_stats(compiled),
+        "memory": memory_stats(compiled),
+        "collectives": collective_stats(hlo),
+        # trip-count-aware per-device costs (cost_analysis counts while
+        # bodies once; this walks the call graph — see launch/hlo_cost.py)
+        "hlo_cost": analyze_hlo(hlo),
+        "hlo_bytes": len(hlo),
+    }
+    return rec
+
+
+def cell_filename(arch: str, shape: str, multi_pod: bool) -> str:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    return f"{arch}__{shape}__{mesh_tag}.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--agg", action="store_true",
+                    help="also dry-run the SEAFL aggregation step per arch")
+    ap.add_argument("--agg-slots", type=int, default=4)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", type=str, default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    cells: list[tuple[str, str]] = []
+    archs = list_configs() if (args.all or args.arch is None) else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = applicable_shapes(cfg) if (args.all or args.shape is None) \
+            else [args.shape]
+        for s in shapes:
+            cells.append((arch, s))
+        if args.agg:
+            cells.append((arch, f"seafl_agg_k{args.agg_slots}"))
+
+    failures = 0
+    for arch, shape in cells:
+        fname = os.path.join(args.out, cell_filename(arch, shape,
+                                                     args.multi_pod))
+        if os.path.exists(fname) and not args.force:
+            print(f"[skip] {arch} x {shape} (cached)")
+            continue
+        cfg = get_config(arch)
+        print(f"[cell] {arch} x {shape} "
+              f"({'2x16x16' if args.multi_pod else '16x16'}) ...", flush=True)
+        try:
+            if shape.startswith("seafl_agg"):
+                cell = build_agg_cell(cfg, mesh, k_slots=args.agg_slots)
+            else:
+                cell = build_cell(cfg, SHAPES[shape], mesh)
+            rec = run_cell(cell, mesh)
+            with open(fname, "w") as f:
+                json.dump(rec, f, indent=1)
+            h = rec["hlo_cost"]
+            m = rec["memory"]
+            print(f"   ok: dot_flops/dev={h['flops']:.3e} "
+                  f"coll/dev={h['coll_total_bytes']:.3e}B "
+                  f"mem/dev={m.get('total_bytes_per_device', 0)/2**30:.2f}GiB "
+                  f"compile={rec['compile_seconds']}s", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"   FAIL: {type(e).__name__}: {e}")
+            traceback.print_exc()
+            with open(fname + ".fail", "w") as f:
+                f.write(traceback.format_exc())
+    print(f"done: {len(cells) - failures}/{len(cells)} cells ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,36 @@
+"""Production mesh factories.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (dryrun.py must set XLA_FLAGS before the first jax init).
+
+Production target: TPU v5e pods.  Single pod = 16x16 (256 chips,
+data x model); multi-pod = 2 x 16 x 16 = 512 chips with a leading 'pod'
+axis that (a) data-parallels across pods and (b) doubles as the concurrent
+FL-cohort axis (one SEAFL client cohort per pod — see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes=None):
+    """Elastic mesh factory for tests and degraded operation.
+
+    shape: tuple of ints.  axes default: trailing names of
+    ('pod', 'data', 'model')."""
+    shape = tuple(shape)
+    if axes is None:
+        axes = ("pod", "data", "model")[-len(shape):]
+    return jax.make_mesh(shape, tuple(axes))
+
+
+# v5e hardware constants used by the roofline analysis (benchmarks/roofline).
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

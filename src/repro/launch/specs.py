@@ -1,0 +1,300 @@
+"""Abstract input specs + sharding trees for every (arch x shape x mesh) cell.
+
+Everything here is ShapeDtypeStruct-based (the shannon/kernels pattern):
+weak-type-correct, shardable, zero device allocation — the full-size configs
+are only ever *lowered*, never materialised.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import LM
+from repro.optim import sgd, TrainState
+from repro.sharding import AxisRules, axis_rules, param_pspecs, named_sharding
+
+PyTree = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh: Mesh, batch: int):
+    """Largest data-parallel axis group that divides the batch."""
+    sizes = mesh_axis_sizes(mesh)
+    for cand in (("pod", "data"), ("data",), ("pod",)):
+        axes = tuple(a for a in cand if a in sizes)
+        if not axes:
+            continue
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if total > 1 and batch % total == 0:
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# input specs per workload shape
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this workload."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        out = {"tokens": _sds((B, 1), jnp.int32)}
+    else:
+        S_txt = S - cfg.n_img_tokens if cfg.family == "vlm" else S
+        out = {"tokens": _sds((B, S_txt), jnp.int32)}
+        if shape.kind == "train":
+            out["labels"] = _sds((B, S_txt), jnp.int32)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        out["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["image_embeds"] = _sds((B, cfg.n_img_tokens, cfg.vision_embed_dim),
+                                   jnp.bfloat16)
+    return out
+
+
+def abstract_params(model: LM) -> PyTree:
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_cache(model: LM, batch: int, max_len: int) -> PyTree:
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_len, model.adtype))
+
+
+# ---------------------------------------------------------------------------
+# cache sharding rules (path-based, mirrors sharding.PARAM_RULES)
+# ---------------------------------------------------------------------------
+
+CACHE_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    (r"/(k|v)$", (None, "batch", "kv_seq", None, None)),
+    (r"/(ks|vs)$", (None, "batch", "kv_seq", None)),   # int8 KV scales
+    (r"/(xk|xv)$", (None, "batch", None, None, None)),
+    (r"/c$", (None, "batch", "kv_seq", None)),
+    (r"/kr$", (None, "batch", "kv_seq", None)),
+    (r"/ssm$", (None, "batch", "tensor", None, None)),
+    (r"/conv$", (None, "batch", None, "tensor")),
+    (r"/h$", (None, "batch", "tensor")),
+    (r"pos$", ()),
+]
+
+
+def cache_pspecs(cache: PyTree, rules: AxisRules, mesh: Mesh) -> PyTree:
+    sizes = mesh_axis_sizes(mesh)
+
+    def resolve(names, shape):
+        resolved = []
+        names = list(names)
+        if len(names) < len(shape):
+            names = [None] * (len(shape) - len(names)) + names
+        names = names[-len(shape):] if shape else []
+        for dim, n in zip(shape, names):
+            axes = rules.resolve(n) if n else None
+            if axes is None:
+                resolved.append(None)
+                continue
+            ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+            total = 1
+            for a in ax_tuple:
+                total *= sizes[a]
+            resolved.append(axes if dim % total == 0 else None)
+        return P(*resolved)
+
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in node.items()}
+        shape = tuple(node.shape)
+        for pat, names in CACHE_RULES:
+            if re.search(pat, prefix):
+                return resolve(names, shape)
+        return P()
+
+    return walk(cache, "")
+
+
+# ---------------------------------------------------------------------------
+# step functions + full lowering bundles
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CellSpec:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    name: str
+    step_fn: Callable
+    args: tuple                 # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def make_train_step(model: LM, lr: float = 0.05, microbatches: int | None = None):
+    """SGD train step with optional gradient accumulation: the global batch
+    is split into M microbatches scanned sequentially — activation memory
+    scales ~1/M while FLOPs are unchanged (grads accumulate in f32)."""
+    opt = sgd(lr)
+    M = microbatches if microbatches is not None else model.cfg.train_microbatches
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True)(params)
+
+    def train_step(state: TrainState, batch):
+        if M <= 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            def split(x):
+                return x.reshape((M, x.shape[0] // M) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(state.params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / M, acc, g)
+                return acc, (l, m)
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            grads, (losses, ms) = jax.lax.scan(body, zero, micro)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, ms)
+        new_state = opt.apply(state, grads)
+        return new_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(model: LM):
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+    return prefill_step
+
+
+def make_serve_step(model: LM):
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, tokens, cache)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+    return serve_step
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               lr: float = 0.05) -> CellSpec:
+    model = LM(cfg)
+    with axis_rules(mesh) as rules:
+        params_abs = abstract_params(model)
+        p_specs = param_pspecs(params_abs, rules)
+        p_shard = named_sharding(mesh, p_specs)
+        dp = batch_axes(mesh, shape.global_batch)
+        batch_abs = input_specs(cfg, shape)
+        b_shard = {}
+        for k, v in batch_abs.items():
+            spec = [dp] + [None] * (len(v.shape) - 1)
+            b_shard[k] = NamedSharding(mesh, P(*spec))
+
+        scalar = NamedSharding(mesh, P())
+
+        if shape.kind == "train":
+            step = make_train_step(model, lr)
+            state_abs = TrainState(_sds((), jnp.int32), params_abs, ())
+            state_shard = TrainState(scalar, p_shard, ())
+            metrics_shard = {"loss": scalar, "ce": scalar, "aux": scalar}
+            return CellSpec(
+                name=f"{cfg.name}:{shape.name}",
+                step_fn=step,
+                args=(state_abs, batch_abs),
+                in_shardings=(state_shard, b_shard),
+                out_shardings=(state_shard, metrics_shard),
+                donate_argnums=(0,),
+            )
+
+        # serving shapes need a KV cache
+        if shape.kind == "prefill":
+            cache_abs = abstract_cache(model, shape.global_batch, shape.seq_len)
+            c_specs = cache_pspecs(cache_abs, rules, mesh)
+            c_shard = named_sharding(mesh, c_specs)
+            step = make_prefill_step(model)
+            V = cfg.vocab_size
+            logits_shard = NamedSharding(
+                mesh, P(dp, None, rules.resolve("tensor")
+                        if V % mesh_axis_sizes(mesh).get("model", 1) == 0 else None))
+            return CellSpec(
+                name=f"{cfg.name}:{shape.name}",
+                step_fn=step,
+                args=(params_abs, batch_abs, cache_abs),
+                in_shardings=(p_shard, b_shard, c_shard),
+                out_shardings=(logits_shard, c_shard),
+                donate_argnums=(2,),
+            )
+
+        # decode: one new token against a filled cache of seq_len
+        cache_abs = abstract_cache(model, shape.global_batch, shape.seq_len)
+        c_specs = cache_pspecs(cache_abs, rules, mesh)
+        c_shard = named_sharding(mesh, c_specs)
+        step = make_serve_step(model)
+        tok_abs = batch_abs["tokens"]
+        tok_shard = b_shard["tokens"]
+        return CellSpec(
+            name=f"{cfg.name}:{shape.name}",
+            step_fn=step,
+            args=(params_abs, cache_abs, tok_abs),
+            in_shardings=(p_shard, c_shard, tok_shard),
+            out_shardings=(tok_shard, c_shard),
+            donate_argnums=(1,),
+        )
+
+
+def build_agg_cell(cfg: ModelConfig, mesh: Mesh, k_slots: int = 4) -> CellSpec:
+    """SEAFL cohort aggregation step (the paper's technique) as a dry-run
+    cell: K buffered sharded client models -> new global (Eqs. 4-8).
+    The K axis shards over 'pod' on the multi-pod mesh (buffer slots live on
+    the pod that produced them).  Uses the delta-free formulation
+    (seafl_aggregate_from_params — §Perf) so no delta buffer is shipped."""
+    from repro.core.aggregation import SeaflHyper, seafl_aggregate_from_params
+
+    model = LM(cfg)
+    with axis_rules(mesh) as rules:
+        params_abs = abstract_params(model)
+        p_specs = param_pspecs(params_abs, rules)
+        p_shard = named_sharding(mesh, p_specs)
+        sizes = mesh_axis_sizes(mesh)
+        buf_axis = "pod" if ("pod" in sizes and k_slots % sizes["pod"] == 0) \
+            else None
+
+        def stackspec(leaf_spec):
+            return NamedSharding(mesh, P(buf_axis, *leaf_spec))
+
+        stacked_abs = jax.tree.map(
+            lambda l: _sds((k_slots,) + tuple(l.shape), l.dtype), params_abs)
+        stacked_shard = jax.tree.map(stackspec, p_specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+        vec = NamedSharding(mesh, P())
+        hyper = SeaflHyper()
+
+        def agg_step(global_params, stacked, sizes_, staleness):
+            new_global, diag = seafl_aggregate_from_params(
+                global_params, stacked, sizes_, staleness, hyper)
+            return new_global, diag["weights"]
+
+        vec_abs = _sds((k_slots,), jnp.float32)
+        return CellSpec(
+            name=f"{cfg.name}:seafl_agg_k{k_slots}",
+            step_fn=agg_step,
+            args=(params_abs, stacked_abs, vec_abs, vec_abs),
+            in_shardings=(p_shard, stacked_shard, vec, vec),
+            out_shardings=(p_shard, vec),
+        )

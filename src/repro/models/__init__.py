@@ -1,0 +1,4 @@
+from repro.models.model import LM, build_model
+from repro.models import cnn
+
+__all__ = ["LM", "build_model", "cnn"]

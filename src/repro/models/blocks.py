@@ -1,0 +1,627 @@
+"""Transformer-family blocks: dense, MoE (gather dispatch), MLA, RG-LRU, SSD.
+
+Every block type exposes:
+  <name>_init(rng, cfg, dtype)            -> params
+  <name>_cache(cfg, batch, max_len, dt)   -> per-layer decode cache (or {})
+  <name>_apply(p, x, cfg, *, mode, cache, pos, enc_out) -> (x, new_cache, aux)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (RG-LRU / Mamba2 frontends)
+# ---------------------------------------------------------------------------
+
+def conv1d_init(rng, width, channels, dtype):
+    scale = 1.0 / math.sqrt(width)
+    return {"w": L._normal(rng, (width, channels), scale, dtype),
+            "b": jnp.zeros((channels,), dtype)}
+
+
+def causal_conv1d(p, x):
+    """x: (B, S, C); depthwise causal conv of width W."""
+    W = p["w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, j:j + x.shape[1]] * p["w"][j].astype(x.dtype) for j in range(W))
+    return out + p["b"].astype(x.dtype)
+
+
+def conv1d_step(p, x1, state):
+    """x1: (B, 1, C); state: (B, W-1, C) last inputs. Returns (y, new_state)."""
+    window = jnp.concatenate([state, x1], axis=1)          # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   p["w"].astype(jnp.float32))[:, None]
+    return y.astype(x1.dtype) + p["b"].astype(x1.dtype), window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# dense block: attn + mlp
+# ---------------------------------------------------------------------------
+
+def _res_scale(cfg: ModelConfig):
+    return 1.4 / math.sqrt(cfg.n_layers) if cfg.depth_scale_residual else 1.0
+
+
+def attn_mlp_init(rng, cfg, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": L.norm_init(cfg.d_model),
+        "attn": L.attn_init(k1, cfg, dtype),
+        "ln2": L.norm_init(cfg.d_model),
+        "mlp": L.mlp_init(k2, cfg, dtype),
+    }
+
+
+def attn_mlp_cache(cfg, batch, max_len, dtype):
+    return {"attn": L.attn_cache_init(cfg, batch, max_len, dtype)}
+
+
+def attn_mlp_apply(p, x, cfg, *, mode="train", cache=None, pos=None, enc_out=None):
+    s = _res_scale(cfg)
+    a, new_c = L.attn_apply(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                            mode=mode, cache=None if cache is None else cache["attn"],
+                            pos=pos)
+    x = x + s * a
+    x = x + s * L.mlp_apply(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    x = constrain(x, "batch", "resid", None)
+    return x, (None if cache is None else {"attn": new_c}), jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# MoE (gather/sort dispatch with per-row capacity; TPU-friendly static shapes)
+# ---------------------------------------------------------------------------
+
+def moe_init(rng, cfg, dtype):
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": {"w": L._normal(ks[0], (d, E), 1.0 / math.sqrt(d), jnp.float32)},
+        "experts": {
+            "w1": L._normal(ks[1], (E, d, f), 1.0 / math.sqrt(d), dtype),
+            "w3": L._normal(ks[2], (E, d, f), 1.0 / math.sqrt(d), dtype),
+            "w2": L._normal(ks[3], (E, f, d), 1.0 / math.sqrt(f), dtype),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.mlp_init(ks[4], cfg, dtype, d_ff=cfg.d_ff * cfg.n_shared_experts)
+    return p
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """Token-choice top-k routing, sort-based dispatch, per-row capacity.
+
+    Dispatch is O(tokens * k) gathers + dense (E, C) matmuls — never the
+    O(tokens * E * C) one-hot einsum, which for E=64 would cost ~100x the
+    expert FLOPs (see DESIGN.md hardware-adaptation notes).
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    Tk = S * k
+    C = max(1, math.ceil(S * k * cfg.capacity_factor / E))
+    C = min(C, Tk)
+
+    # routing sorts/gathers/scatters index along the sequence axis: gather
+    # the (possibly seq-sharded) residual first so argsort/take/scatter stay
+    # device-local (a sharded sort lowers to a multi-round collective
+    # network — §Perf iteration 2).
+    x = constrain(x, "batch", None, None)
+    router_logits = x.astype(jnp.float32) @ p["router"]["w"]          # (B,S,E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                      # (B,S,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- sort (token, expert) pairs by expert id, per batch row ----
+    e_flat = gate_idx.reshape(B, Tk)
+    g_flat = gate_vals.reshape(B, Tk)
+    order = jnp.argsort(e_flat, axis=-1, stable=True)                  # (B,Tk)
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=-1)
+    g_sorted = jnp.take_along_axis(g_flat, order, axis=-1)
+    tok_sorted = order // k                                            # token ids
+
+    # segment starts per expert via searchsorted; (B, E+1)
+    seg = jax.vmap(lambda es: jnp.searchsorted(es, jnp.arange(E + 1)))(e_sorted)
+    slots = seg[:, :E, None] + jnp.arange(C)[None, None, :]            # (B,E,C)
+    valid = slots < seg[:, 1:, None]
+    slots_c = jnp.clip(slots, 0, Tk - 1).reshape(B, E * C)
+
+    slot_tok = jnp.take_along_axis(tok_sorted, slots_c, axis=-1)       # (B,E*C)
+    slot_gate = jnp.take_along_axis(g_sorted, slots_c, axis=-1).reshape(B, E, C)
+    slot_gate = jnp.where(valid, slot_gate, 0.0)
+
+    xe = jnp.take_along_axis(x, slot_tok[..., None], axis=1)           # (B,E*C,D)
+    xe = xe.reshape(B, E, C, D)
+    xe = constrain(xe, "batch", None, None, None)
+
+    act = L.act_fn(cfg.act)
+    w1, w3, w2 = (p["experts"][n].astype(x.dtype) for n in ("w1", "w3", "w2"))
+    h = act(jnp.einsum("becd,edf->becf", xe, w1))
+    h = h * jnp.einsum("becd,edf->becf", xe, w3)
+    h = constrain(h, "batch", None, None, "tensor")
+    ye = jnp.einsum("becf,efd->becd", h, w2)
+    ye = ye * slot_gate[..., None].astype(ye.dtype)
+
+    out = jnp.zeros_like(x)
+    out = out.at[jnp.arange(B)[:, None], slot_tok.reshape(B, E * C)].add(
+        ye.reshape(B, E * C, D))
+
+    if "shared" in p:
+        out = out + L.mlp_apply(p["shared"], x, cfg)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                                  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1))
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+    return out, aux
+
+
+def attn_moe_init(rng, cfg, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": L.norm_init(cfg.d_model),
+        "attn": L.attn_init(k1, cfg, dtype),
+        "ln2": L.norm_init(cfg.d_model),
+        "moe": moe_init(k2, cfg, dtype),
+    }
+
+
+attn_moe_cache = attn_mlp_cache
+
+
+def attn_moe_apply(p, x, cfg, *, mode="train", cache=None, pos=None, enc_out=None):
+    a, new_c = L.attn_apply(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                            mode=mode, cache=None if cache is None else cache["attn"],
+                            pos=pos)
+    x = x + a
+    m, aux = moe_apply(p["moe"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    x = x + m
+    x = constrain(x, "batch", "resid", None)
+    return x, (None if cache is None else {"attn": new_c}), aux
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention) + MoE
+# ---------------------------------------------------------------------------
+
+def mla_init(rng, cfg, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(rng, 5)
+    return {
+        "wq": L.linear_init(ks[0], d, H * (dn + dr), dtype),
+        "w_dkv": L.linear_init(ks[1], d, r + dr, dtype),
+        "kv_norm": L.norm_init(r),
+        "w_uk": L._normal(ks[2], (r, H, dn), 1.0 / math.sqrt(r), dtype),
+        "w_uv": L._normal(ks[3], (r, H, dv), 1.0 / math.sqrt(r), dtype),
+        "wo": L.linear_init(ks[4], H * dv, d, dtype),
+    }
+
+
+def mla_cache(cfg, batch, max_len, dtype):
+    return {"c": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)}
+
+
+def _mla_project(p, x, cfg):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = L.linear(p["wq"], x).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckr = L.linear(p["w_dkv"], x)
+    c, k_rope = ckr[..., :cfg.kv_lora_rank], ckr[..., cfg.kv_lora_rank:]
+    c = L.rmsnorm(p["kv_norm"], c, cfg.norm_eps)
+    return q_nope, q_rope, c, k_rope
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, mode, cache, pos):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope, c, k_rope = _mla_project(p, x, cfg)
+
+    positions = (jnp.arange(S)[None, :] if mode != "decode"
+                 else jnp.full((B, 1), pos))
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    new_cache = cache
+    if mode in ("train", "prefill"):
+        # standard path: materialise per-head k/v (cheaper matmuls, cache stays
+        # compressed)
+        k_nope = jnp.einsum("bsr,rhn->bshn", c, p["w_uk"].astype(c.dtype))
+        v = jnp.einsum("bsr,rhv->bshv", c, p["w_uv"].astype(c.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        o = L.chunked_attention(q, k, v, causal=True)
+        if mode == "prefill":
+            new_cache = {
+                "c": jax.lax.dynamic_update_slice_in_dim(
+                    cache["c"], c.astype(cache["c"].dtype), 0, axis=1),
+                "kr": jax.lax.dynamic_update_slice_in_dim(
+                    cache["kr"], k_rope.astype(cache["kr"].dtype), 0, axis=1),
+            }
+    else:
+        # absorbed decode path: score directly in the compressed latent space.
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cache["c"], c.astype(cache["c"].dtype), pos, axis=1)
+        ckr = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], k_rope.astype(cache["kr"].dtype), pos, axis=1)
+        new_cache = {"c": cc, "kr": ckr}
+        cc_ = constrain(cc, "batch", "kv_seq", None)
+        ckr_ = constrain(ckr, "batch", "kv_seq", None)
+        q_c = jnp.einsum("bshn,rhn->bshr", q_nope, p["w_uk"].astype(x.dtype))
+        scale = 1.0 / math.sqrt(dn + dr)
+        s = (jnp.einsum("bshr,btr->bhst", q_c.astype(jnp.float32),
+                        cc_.astype(jnp.float32))
+             + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                          ckr_.astype(jnp.float32))) * scale
+        t_pos = jnp.arange(cc.shape[1])
+        s = jnp.where((t_pos <= pos)[None, None, None, :], s, L.NEG_INF)
+        attn = jax.nn.softmax(s, axis=-1)
+        o_c = jnp.einsum("bhst,btr->bshr", attn.astype(cc_.dtype), cc_)
+        o = jnp.einsum("bshr,rhv->bshv", o_c, p["w_uv"].astype(x.dtype))
+    return L.linear(p["wo"], o.reshape(B, S, H * dv)), new_cache
+
+
+def mla_moe_init(rng, cfg, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": L.norm_init(cfg.d_model),
+        "mla": mla_init(k1, cfg, dtype),
+        "ln2": L.norm_init(cfg.d_model),
+        "moe": moe_init(k2, cfg, dtype),
+    }
+
+
+def mla_moe_cache(cfg, batch, max_len, dtype):
+    return {"mla": mla_cache(cfg, batch, max_len, dtype)}
+
+
+def mla_moe_apply(p, x, cfg, *, mode="train", cache=None, pos=None, enc_out=None):
+    a, new_c = mla_apply(p["mla"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                         mode=mode, cache=None if cache is None else cache["mla"],
+                         pos=pos)
+    x = x + a
+    m, aux = moe_apply(p["moe"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    x = x + m
+    x = constrain(x, "batch", "resid", None)
+    return x, (None if cache is None else {"mla": new_c}), aux
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+RG_C = 8.0
+
+
+def rec_init(rng, cfg, dtype):
+    d, w = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(rng, 6)
+    return {
+        "ln1": L.norm_init(d),
+        "in_proj": L.linear_init(ks[0], d, 2 * w, dtype),
+        "conv": conv1d_init(ks[1], cfg.conv_width, w, dtype),
+        "a_gate": L.linear_init(ks[2], w, w, dtype),
+        "x_gate": L.linear_init(ks[3], w, w, dtype),
+        "rg_a": jnp.full((w,), 2.0, jnp.float32),      # sigmoid(2) ~ .88 decay
+        "out_proj": L.linear_init(ks[4], w, d, dtype),
+        "ln2": L.norm_init(d),
+        "mlp": L.mlp_init(ks[5], cfg, dtype),
+    }
+
+
+def rec_cache(cfg, batch, max_len, dtype):
+    w = cfg.rnn_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype)}
+
+
+def rg_lru_gates(p, xb):
+    """Returns (log_a, b_in) in f32 for h_t = a_t h_{t-1} + b_t."""
+    r = jax.nn.sigmoid(L.linear(p["a_gate"], xb).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.linear(p["x_gate"], xb).astype(jnp.float32))
+    log_a = RG_C * r * jax.nn.log_sigmoid(p["rg_a"].astype(jnp.float32))
+    gated = i * xb.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    return log_a, b
+
+
+def rg_lru_scan(log_a, b, h0=None):
+    """Associative linear recurrence h_t = exp(log_a_t) h_{t-1} + b_t (f32)."""
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rec_apply(p, x, cfg, *, mode="train", cache=None, pos=None, enc_out=None):
+    B, S, D = x.shape
+    u = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    xz = L.linear(p["in_proj"], u)
+    xb, z = jnp.split(xz, 2, axis=-1)
+    xb = constrain(xb, "batch", None, "tensor")
+
+    new_cache = cache
+    if mode == "decode":
+        xb, conv_state = conv1d_step(p["conv"], xb, cache["conv"])
+        log_a, b = rg_lru_gates(p, xb)
+        h = jnp.exp(log_a[:, 0]) * cache["h"] + b[:, 0]
+        new_cache = {"h": h, "conv": conv_state}
+        h = h[:, None]
+    else:
+        xb = causal_conv1d(p["conv"], xb)
+        log_a, b = rg_lru_gates(p, xb)
+        h0 = cache["h"] if cache is not None else None
+        h = rg_lru_scan(log_a, b, h0)
+        if mode == "prefill":
+            new_cache = {"h": h[:, -1],
+                         "conv": xz[:, -(cfg.conv_width - 1):, :cfg.rnn_width]
+                         .astype(cache["conv"].dtype)}
+
+    out = L.linear(p["out_proj"], (h.astype(x.dtype)) * jax.nn.gelu(z))
+    x = x + out
+    x = x + L.mlp_apply(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    x = constrain(x, "batch", "resid", None)
+    return x, new_cache, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD block (chunked state-space-dual form; MXU-friendly)
+# ---------------------------------------------------------------------------
+
+def ssd_init(rng, cfg, dtype):
+    d, din, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = din // cfg.ssm_head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "ln1": L.norm_init(d),
+        "in_proj": L.linear_init(ks[0], d, 2 * din + 2 * ds + nh, dtype),
+        "conv": conv1d_init(ks[1], cfg.conv_width, din + 2 * ds, dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_norm": L.norm_init(din),
+        "out_proj": L.linear_init(ks[2], din, d, dtype),
+    }
+
+
+def ssd_cache(cfg, batch, max_len, dtype):
+    din, ds = cfg.d_inner, cfg.ssm_state
+    nh, hd = din // cfg.ssm_head_dim, cfg.ssm_head_dim
+    return {"ssm": jnp.zeros((batch, nh, hd, ds), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, din + 2 * ds), dtype)}
+
+
+def _ssd_split(p, u, cfg):
+    din, ds = cfg.d_inner, cfg.ssm_state
+    nh = din // cfg.ssm_head_dim
+    zxbcdt = L.linear(p["in_proj"], u)
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + din + 2 * ds]
+    dt = zxbcdt[..., -nh:]
+    return z, xbc, dt
+
+
+def ssd_chunked(x, dt, a, B_mat, C_mat, chunk, h0=None):
+    """Chunked SSD scan.  x:(B,S,nh,hd) dt:(B,S,nh) a:(nh,) B/C:(B,S,ds).
+
+    Returns (y (B,S,nh,hd), final_state (B,nh,hd,ds)).  All f32.
+    """
+    Bb, S, nh, hd = x.shape
+    ds = B_mat.shape[-1]
+    S0_len = S
+    pad = (-S) % chunk
+    if pad:
+        # dt=0 on padded steps -> decay 1, zero contribution: exact.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    xc = x.reshape(Bb, nc, chunk, nh, hd)
+    dtc = dt.reshape(Bb, nc, chunk, nh)
+    Bc = B_mat.reshape(Bb, nc, chunk, ds)
+    Cc = C_mat.reshape(Bb, nc, chunk, ds)
+
+    dA = dtc * a[None, None, None, :]                     # (B,nc,Q,nh) negative
+    cum = jnp.cumsum(dA, axis=2)
+    # intra-chunk "attention": M[q,k] = C_q.B_k * exp(cum_q - cum_k) * dt_k, k<=q
+    # NOTE: all contractions below are explicit two-operand dots — a 4-operand
+    # einsum lets XLA pick a contraction order that materialises
+    # (B,nc,Q,nh,hd,ds)-sized intermediates (tens of GiB per device).
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,nh)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: non-causal entries have seg > 0 and exp overflows in
+    # the backward pass (inf * 0 = NaN) if masked after.
+    seg = jnp.where(causal[None, None, :, :, None], seg, -1e30)
+    Lmat = jnp.exp(seg)
+    scores = jnp.einsum("bcqs,bcks->bcqk", Cc, Bc)        # (B,nc,Q,Q)
+    W = scores[..., None] * Lmat * dtc[:, :, None, :, :]  # (B,nc,Q,Q,nh)
+    y_diag = jnp.einsum("bcqkh,bckhd->bcqhd", W, xc)
+
+    # per-chunk end state: S_c = sum_k exp(cum_Q - cum_k) dt_k B_k (x) x_k
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,Q,nh)
+    wX = (decay_end * dtc)[..., None] * xc                # (B,nc,Q,nh,hd)
+    Sc = jnp.einsum("bckhd,bcks->bchds", wX, Bc)          # (B,nc,nh,hd,ds)
+
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,nc,nh)
+
+    def body(S_prev, inp):
+        Sc_i, dec_i = inp
+        S_new = dec_i[:, :, None, None] * S_prev + Sc_i
+        return S_new, S_prev
+
+    S0 = jnp.zeros((Bb, nh, hd, ds), jnp.float32) if h0 is None else h0
+    S_final, S_prevs = jax.lax.scan(
+        body, S0, (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)                 # (B,nc,nh,hd,ds)
+
+    in_decay = jnp.exp(cum)                               # (B,nc,Q,nh)
+    y_off = jnp.einsum("bcqs,bchds->bcqhd", Cc, S_prevs) \
+        * in_decay[..., None]
+    y = (y_diag + y_off).reshape(Bb, S, nh, hd)[:, :S0_len]
+    return y, S_final
+
+
+def ssd_apply(p, x, cfg, *, mode="train", cache=None, pos=None, enc_out=None):
+    B, S, D = x.shape
+    din, ds = cfg.d_inner, cfg.ssm_state
+    nh, hd = din // cfg.ssm_head_dim, cfg.ssm_head_dim
+    u = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    z, xbc, dt = _ssd_split(p, u, cfg)
+    z = constrain(z, "batch", None, "tensor")
+
+    a = -jnp.exp(p["a_log"])                              # (nh,) negative
+    new_cache = cache
+    if mode == "decode":
+        xbc, conv_state = conv1d_step(p["conv"], xbc, cache["conv"])
+        xbc = jax.nn.silu(xbc)                            # (B, 1, C)
+        xs = xbc[:, 0, :din].reshape(B, nh, hd).astype(jnp.float32)
+        Bm = xbc[:, 0, din:din + ds].astype(jnp.float32)
+        Cm = xbc[:, 0, din + ds:].astype(jnp.float32)
+        dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+        dA = jnp.exp(dtv * a[None, :])                    # (B,nh)
+        S_new = (dA[:, :, None, None] * cache["ssm"]
+                 + jnp.einsum("bh,bhd,bs->bhds", dtv, xs, Bm))
+        y = jnp.einsum("bs,bhds->bhd", Cm, S_new) + p["D"][None, :, None] * xs
+        y = y.reshape(B, 1, din)
+        new_cache = {"ssm": S_new, "conv": conv_state}
+    else:
+        xbc_raw = xbc
+        xbc = jax.nn.silu(causal_conv1d(p["conv"], xbc))
+        xs = xbc[..., :din].reshape(B, S, nh, hd).astype(jnp.float32)
+        # SSD head parallelism: the intra-chunk decay tensor
+        # (B, nc, Q, Q, nh) and chunk states are the memory hot spot —
+        # shard heads over 'model' (nh divides any sane tp degree).
+        xs = constrain(xs, "batch", None, "tensor", None)
+        Bm = xbc[..., din:din + ds].astype(jnp.float32)
+        Cm = xbc[..., din + ds:].astype(jnp.float32)
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        dtv = constrain(dtv, "batch", None, "tensor")
+        h0 = cache["ssm"] if cache is not None else None
+        chunk = min(cfg.ssm_chunk, S)
+        y, S_final = ssd_chunked(xs, dtv, a, Bm, Cm, chunk, h0)
+        y = y + p["D"][None, None, :, None] * xs
+        y = y.reshape(B, S, din)
+        if mode == "prefill":
+            new_cache = {"ssm": S_final,
+                         "conv": xbc_raw[:, -(cfg.conv_width - 1):]
+                         .astype(cache["conv"].dtype)}
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = L.rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    out = L.linear(p["out_proj"], y)
+    x = x + out
+    x = constrain(x, "batch", "resid", None)
+    return x, new_cache, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Encoder / decoder blocks (whisper backbone; LayerNorm + ungated GeLU MLP)
+# ---------------------------------------------------------------------------
+
+def enc_init(rng, cfg, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": L.norm_init(cfg.d_model, bias=True),
+        "attn": L.attn_init(k1, cfg, dtype),
+        "ln2": L.norm_init(cfg.d_model, bias=True),
+        "mlp": L.mlp_init(k2, cfg, dtype, gated=False),
+    }
+
+
+def enc_cache(cfg, batch, max_len, dtype):
+    return {}
+
+
+def enc_apply(p, x, cfg, *, mode="train", cache=None, pos=None, enc_out=None):
+    B, S, _ = x.shape
+    u = L.layernorm(p["ln1"], x, cfg.norm_eps)
+    H, KVH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.linear(p["attn"]["wq"], u).reshape(B, S, H, Dh)
+    k = L.linear(p["attn"]["wk"], u).reshape(B, S, KVH, Dh)
+    v = L.linear(p["attn"]["wv"], u).reshape(B, S, KVH, Dh)
+    positions = jnp.arange(S)[None, :]
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = L.chunked_attention(q, k, v, causal=cfg.enc_causal)
+    x = x + L.linear(p["attn"]["wo"], o.reshape(B, S, H * Dh))
+    x = x + L.mlp_apply(p["mlp"], L.layernorm(p["ln2"], x, cfg.norm_eps), cfg)
+    return x, cache, jnp.float32(0.0)
+
+
+def dec_init(rng, cfg, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "ln1": L.norm_init(cfg.d_model, bias=True),
+        "attn": L.attn_init(k1, cfg, dtype),
+        "ln_x": L.norm_init(cfg.d_model, bias=True),
+        "xattn": L.attn_init(k2, cfg, dtype),
+        "ln2": L.norm_init(cfg.d_model, bias=True),
+        "mlp": L.mlp_init(k3, cfg, dtype, gated=False),
+    }
+
+
+def dec_cache(cfg, batch, max_len, dtype):
+    return {
+        "attn": L.attn_cache_init(cfg, batch, max_len, dtype),
+        "xk": jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "xv": jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def dec_apply(p, x, cfg, *, mode="train", cache=None, pos=None, enc_out=None):
+    B, S, _ = x.shape
+    KVH, Dh = cfg.n_kv_heads, cfg.head_dim
+    a, new_attn = L.attn_apply(p["attn"], L.layernorm(p["ln1"], x, cfg.norm_eps),
+                               cfg, mode=mode,
+                               cache=None if cache is None else cache["attn"],
+                               pos=pos)
+    x = x + a
+    u = L.layernorm(p["ln_x"], x, cfg.norm_eps)
+    if mode == "decode":
+        xk, xv = cache["xk"], cache["xv"]
+    else:
+        xk = L.linear(p["xattn"]["wk"], enc_out).reshape(B, -1, KVH, Dh)
+        xv = L.linear(p["xattn"]["wv"], enc_out).reshape(B, -1, KVH, Dh)
+    ca, _ = L.attn_apply(p["xattn"], u, cfg, mode="train", cross_kv=(xk, xv))
+    x = x + ca
+    x = x + L.mlp_apply(p["mlp"], L.layernorm(p["ln2"], x, cfg.norm_eps), cfg)
+    new_cache = cache
+    if cache is not None:
+        new_cache = {"attn": new_attn,
+                     "xk": xk.astype(cache["xk"].dtype) if mode != "decode" else xk,
+                     "xv": xv.astype(cache["xv"].dtype) if mode != "decode" else xv}
+    return x, new_cache, jnp.float32(0.0)
+
+
+BLOCKS = {
+    "attn_mlp": (attn_mlp_init, attn_mlp_cache, attn_mlp_apply),
+    "attn_moe": (attn_moe_init, attn_moe_cache, attn_moe_apply),
+    "mla_moe": (mla_moe_init, mla_moe_cache, mla_moe_apply),
+    "rec": (rec_init, rec_cache, rec_apply),
+    "attn": (attn_mlp_init, attn_mlp_cache, attn_mlp_apply),  # hybrid local-attn
+    "ssd": (ssd_init, ssd_cache, ssd_apply),
+    "enc": (enc_init, enc_cache, enc_apply),
+    "dec": (dec_init, dec_cache, dec_apply),
+}

@@ -1,0 +1,231 @@
+"""Paper evaluation models in JAX: LeNet-5, ResNet-18, VGG-16 (+ tiny variants).
+
+These are the models SEAFL's own experiments use (EMNIST -> LeNet-5,
+CIFAR-10 -> ResNet-18, CINIC-10 -> VGG-16).  ResNet uses GroupNorm instead of
+BatchNorm — standard practice in FL where per-client batch statistics break
+under non-IID data.  Reduced variants (``lenet5_small`` etc.) keep benchmarks
+CPU-fast while exercising identical code paths.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cross_entropy
+
+
+def _conv_init(rng, kh, kw, cin, cout, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(kh * kw * cin)
+    return {"w": jax.random.normal(rng, (kh, kw, cin, cout), dtype) * scale,
+            "b": jnp.zeros((cout,), dtype)}
+
+
+def _conv(p, x, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _dense_init(rng, din, dout, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(din)
+    return {"w": jax.random.normal(rng, (din, dout), dtype) * scale,
+            "b": jnp.zeros((dout,), dtype)}
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _gn_init(c):
+    return {"scale": jnp.ones((c,)), "b": jnp.zeros((c,))}
+
+
+def _groupnorm(p, x, groups=8, eps=1e-5):
+    B, H, W, C = x.shape
+    g = math.gcd(groups, C)
+    xg = x.reshape(B, H, W, g, C // g)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(B, H, W, C) * p["scale"] + p["b"]
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def _avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+class ImageClassifier:
+    """Functional wrapper with .init / .apply / .loss / .accuracy."""
+
+    def __init__(self, init_fn, apply_fn, name):
+        self._init, self._apply, self.name = init_fn, apply_fn, name
+
+    def init(self, rng):
+        return self._init(rng)
+
+    def apply(self, params, images):
+        return self._apply(params, images)
+
+    def loss(self, params, batch):
+        logits = self._apply(params, batch["x"])
+        return cross_entropy(logits[:, None], batch["y"][:, None]), {}
+
+    def accuracy(self, params, batch):
+        logits = self._apply(params, batch["x"])
+        return jnp.mean(jnp.argmax(logits, -1) == batch["y"])
+
+
+# --------------------------------------------------------------------- LeNet
+
+def lenet5(num_classes=10, in_channels=1, img=28, width=1.0):
+    c1, c2, f1, f2 = (int(6 * width), int(16 * width),
+                      int(120 * width), int(84 * width))
+    s = img // 4  # after two 2x2 pools with SAME convs
+
+    def init(rng):
+        ks = jax.random.split(rng, 5)
+        return {
+            "c1": _conv_init(ks[0], 5, 5, in_channels, c1),
+            "c2": _conv_init(ks[1], 5, 5, c1, c2),
+            "f1": _dense_init(ks[2], s * s * c2, f1),
+            "f2": _dense_init(ks[3], f1, f2),
+            "out": _dense_init(ks[4], f2, num_classes),
+        }
+
+    def apply(p, x):
+        x = _maxpool(jnp.tanh(_conv(p["c1"], x)))
+        x = _maxpool(jnp.tanh(_conv(p["c2"], x)))
+        x = x.reshape(x.shape[0], -1)
+        x = jnp.tanh(_dense(p["f1"], x))
+        x = jnp.tanh(_dense(p["f2"], x))
+        return _dense(p["out"], x)
+
+    return ImageClassifier(init, apply, "lenet5")
+
+
+# -------------------------------------------------------------------- ResNet
+
+def _block_init(rng, cin, cout, dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    p = {"c1": _conv_init(ks[0], 3, 3, cin, cout),
+         "n1": _gn_init(cout),
+         "c2": _conv_init(ks[1], 3, 3, cout, cout),
+         "n2": _gn_init(cout)}
+    if cin != cout:
+        p["proj"] = _conv_init(ks[2], 1, 1, cin, cout)
+    return p
+
+
+def _block_apply(p, x, stride):
+    h = jax.nn.relu(_groupnorm(p["n1"], _conv(p["c1"], x, stride)))
+    h = _groupnorm(p["n2"], _conv(p["c2"], h))
+    sc = x if "proj" not in p else _conv(p["proj"], x, stride)
+    return jax.nn.relu(h + sc)
+
+
+def resnet(num_classes=10, in_channels=3, stage_sizes=(2, 2, 2, 2), width=64):
+    """stage_sizes=(2,2,2,2) -> ResNet-18; (1,1,1,1) -> ResNet-10 (tests)."""
+    widths = [width * (2 ** i) for i in range(len(stage_sizes))]
+
+    def init(rng):
+        ks = jax.random.split(rng, 2 + sum(stage_sizes))
+        p = {"stem": _conv_init(ks[0], 3, 3, in_channels, width),
+             "stem_n": _gn_init(width), "blocks": {}}
+        i = 1
+        cin = width
+        for si, (n, w) in enumerate(zip(stage_sizes, widths)):
+            for bi in range(n):
+                p["blocks"][f"s{si}b{bi}"] = _block_init(ks[i], cin, w)
+                cin = w
+                i += 1
+        p["head"] = _dense_init(ks[i], widths[-1], num_classes)
+        return p
+
+    def apply(p, x):
+        x = jax.nn.relu(_groupnorm(p["stem_n"], _conv(p["stem"], x)))
+        for si, n in enumerate(stage_sizes):
+            for bi in range(n):
+                stride = 2 if (bi == 0 and si > 0) else 1
+                x = _block_apply(p["blocks"][f"s{si}b{bi}"], x, stride)
+        return _dense(p["head"], _avgpool_global(x))
+
+    return ImageClassifier(init, apply, f"resnet{2 + 2 * sum(stage_sizes)}")
+
+
+def resnet18(num_classes=10, in_channels=3):
+    return resnet(num_classes, in_channels, (2, 2, 2, 2), 64)
+
+
+# ----------------------------------------------------------------------- VGG
+
+VGG16_PLAN = (64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+              512, 512, 512, "M", 512, 512, 512, "M")
+VGG9_PLAN = (32, "M", 64, "M", 128, 128, "M")
+
+
+def vgg(num_classes=10, in_channels=3, plan=VGG16_PLAN, fc=512):
+    def init(rng):
+        ks = jax.random.split(rng, len(plan) + 2)
+        p = {"convs": {}}
+        cin, i = in_channels, 0
+        for li, item in enumerate(plan):
+            if item == "M":
+                continue
+            p["convs"][f"c{li}"] = _conv_init(ks[i], 3, 3, cin, item)
+            cin = item
+            i += 1
+        p["f1"] = _dense_init(ks[-2], cin, fc)
+        p["out"] = _dense_init(ks[-1], fc, num_classes)
+        return p
+
+    def apply(p, x):
+        for li, item in enumerate(plan):
+            if item == "M":
+                x = _maxpool(x)
+            else:
+                x = jax.nn.relu(_conv(p["convs"][f"c{li}"], x))
+        x = _avgpool_global(x)
+        x = jax.nn.relu(_dense(p["f1"], x))
+        return _dense(p["out"], x)
+
+    return ImageClassifier(init, apply, f"vgg{len([i for i in plan if i != 'M']) + 2}")
+
+
+def vgg16(num_classes=10, in_channels=3):
+    return vgg(num_classes, in_channels, VGG16_PLAN)
+
+
+# ------------------------------------------------------------ tiny/test nets
+
+def lenet5_small(num_classes=10, in_channels=1, img=8):
+    return lenet5(num_classes, in_channels, img, width=0.5)
+
+
+def mlp(num_classes=10, d_in=32, hidden=64):
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"f1": _dense_init(k1, d_in, hidden),
+                "out": _dense_init(k2, hidden, num_classes)}
+
+    def apply(p, x):
+        x = x.reshape(x.shape[0], -1)
+        return _dense(p["out"], jax.nn.relu(_dense(p["f1"], x)))
+
+    return ImageClassifier(init, apply, "mlp")
+
+
+MODELS = {
+    "lenet5": lenet5, "resnet18": resnet18, "vgg16": vgg16,
+    "lenet5_small": lenet5_small, "mlp": mlp,
+    "resnet10": lambda **kw: resnet(stage_sizes=(1, 1, 1, 1), width=16, **kw),
+    "vgg9": lambda **kw: vgg(plan=VGG9_PLAN, fc=128, **kw),
+}

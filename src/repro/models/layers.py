@@ -1,0 +1,397 @@
+"""Shared neural building blocks (functional; explicit param pytrees).
+
+Numerics policy: params/activations in ``cfg.dtype`` (bf16 by default);
+softmax, norms, loss, router and recurrence gates in f32.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import axis_size, constrain
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _normal(rng, shape, scale, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+def linear_init(rng, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return {"w": _normal(rng, (d_in, d_out), scale, dtype)}
+
+
+def linear(p, x):
+    return x @ p["w"].astype(x.dtype)
+
+
+def norm_init(d, dtype=jnp.float32, bias=False):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    if "b" in p:
+        out = out + p["b"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def act_fn(name):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "gelu_tanh": partial(jax.nn.gelu, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core — query-chunked, memory O(q_chunk * kv_window), exact.
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _softcap(scores, cap):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def attention_scores_ctx(q, k, v, mask, softcap=None):
+    """q:(B,Sq,KVH,G,Dh) k:(B,Skv,KVH,Dh) v same; mask:(B,1,1,Sq,Skv) or None."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                      kv_len=None, q_chunk=512, softcap=None,
+                      score_shard="qrows"):
+    """Exact attention, scanned over query chunks.
+
+    q: (B, Sq, H, Dh); k, v: (B, Skv, KVH, Dh).  GQA via reshape (never
+    materialises repeated KV).  ``q_offset`` is the absolute position of
+    q[ :, 0] relative to k[:, 0] (decode / chunked prefill).  ``kv_len``
+    masks a partially-filled cache.  ``window`` additionally restricts
+    attention to the last `window` positions (sliding-window); the windowed
+    path slices KV so compute is O(Sq * (window + chunk)), not O(Sq * Skv).
+
+    score_shard — how the f32 score tiles shard over the tensor axis:
+      "qrows"     query rows of each chunk (universal; default)
+      "heads"     KV heads when they divide tp, else q-head groups with KV
+                  replicated (e.g. granite MQA G=48)
+      "repeat_kv" materialise KV per q-head and shard all H heads (qwen3 /
+                  mixtral whose KVH=8, G=8 both fail a 16-way axis but
+                  H=64/48 divides; KV copies are MBs, saved gathers are GBs)
+    """
+    B, Sq, H, Dh = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KVH
+    tp = axis_size("heads")
+
+    if (score_shard == "repeat_kv" and Sq > 1 and G > 1
+            and H % tp == 0 and tp > 1):
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        KVH, G = H, 1
+    qg = q.reshape(B, Sq, KVH, G, Dh)
+
+    shard_in_body = score_shard == "qrows"
+    if score_shard in ("heads", "repeat_kv") and tp > 1 and Sq > 1:
+        if KVH % tp == 0 and KVH > 1:
+            qg = constrain(qg, "batch", None, "heads", None, None)
+            k = constrain(k, "batch", None, "heads", None)
+            v = constrain(v, "batch", None, "heads", None)
+        elif G % tp == 0 and G > 1:
+            qg = constrain(qg, "batch", None, None, "heads", None)
+            k = constrain(k, "batch", None, None, None)   # replicate tiny KV
+            v = constrain(v, "batch", None, None, None)
+        else:
+            shard_in_body = True    # fall back to context parallelism
+
+    def block_mask(q_pos, k_pos):
+        m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+        if causal:
+            m &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            m &= k_pos[None, :] > q_pos[:, None] - window
+        return m
+
+    if Sq == 1:
+        # decode fast path: single query, full (or ring) cache
+        q_pos = jnp.array([q_offset])
+        k_pos = jnp.arange(Skv)
+        m = block_mask(q_pos, k_pos)
+        if kv_len is not None:
+            m &= (k_pos < kv_len)[None, :]
+        o = attention_scores_ctx(qg, k, v, m[None, None, None], softcap)
+        return o.reshape(B, Sq, H, Dv)
+
+    n_chunks = max(1, math.ceil(Sq / q_chunk))
+    qc = min(q_chunk, Sq)
+    pad = n_chunks * qc - Sq
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qg = qg.reshape(B, n_chunks, qc, KVH, G, Dh)
+
+    use_window_slice = window is not None and Skv > (window + qc)
+    kv_span = min(Skv, window + qc) if use_window_slice else Skv
+
+    # jax.checkpoint: the scan backward must not stash per-chunk score/prob
+    # tensors (B,H,qc,Skv) for all chunks at once — recompute them per chunk.
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def body(carry, xs):
+        qi, idx = xs
+        if shard_in_body:
+            # context-parallel scores: shard this chunk's query rows over
+            # the tensor axis — works for any head count (10/14/24/36 heads
+            # don't divide a 16-way axis; q rows do), bounding the f32 score
+            # tile to (B, H, qc/tp, Skv) per device.
+            qi = constrain(qi, "batch", "attn_q", None, None, None)
+        q_pos = q_offset + idx * qc + jnp.arange(qc)
+        if use_window_slice:
+            start = jnp.clip(q_offset + idx * qc - window + 1, 0, Skv - kv_span)
+            ki = jax.lax.dynamic_slice_in_dim(k, start, kv_span, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, start, kv_span, axis=1)
+            k_pos = start + jnp.arange(kv_span)
+        else:
+            ki, vi = k, v
+            k_pos = jnp.arange(kv_span)
+        m = block_mask(q_pos, k_pos)
+        if kv_len is not None:
+            m &= (k_pos < kv_len)[None, :]
+        o = attention_scores_ctx(qi, ki, vi, m[None, None, None], softcap)
+        return carry, o
+
+    _, o = jax.lax.scan(body, (), (jnp.moveaxis(qg, 1, 0), jnp.arange(n_chunks)))
+    o = jnp.moveaxis(o, 0, 1).reshape(B, n_chunks * qc, KVH, G, Dv)
+    if pad:
+        o = o[:, :Sq]
+    return o.reshape(B, Sq, H, Dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (init + apply in train/prefill/decode modes)
+# ---------------------------------------------------------------------------
+
+def attn_init(rng, cfg: ModelConfig, dtype):
+    ks = jax.random.split(rng, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": linear_init(ks[0], d, qd, dtype),
+        "wk": linear_init(ks[1], d, kvd, dtype),
+        "wv": linear_init(ks[2], d, kvd, dtype),
+        "wo": linear_init(ks[3], qd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(cfg.head_dim)
+        p["k_norm"] = norm_init(cfg.head_dim)
+    return p
+
+
+def attn_cache_init(cfg: ModelConfig, batch, max_len, dtype):
+    span = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (batch, span, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "ks": jnp.zeros(shape[:3], jnp.float32),
+            "vs": jnp.zeros(shape[:3], jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _kv_quant(x):
+    """Per-(batch, pos, head) symmetric int8 quantisation of K/V."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def _cache_write(cfg, cache, k, v, start):
+    """Write k/v (B, S, KVH, Dh) into the cache at position `start`."""
+    upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+        buf, val.astype(buf.dtype), start, axis=1)
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _kv_quant(k)
+        vq, vs = _kv_quant(v)
+        return {"k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
+                "ks": upd(cache["ks"], ks), "vs": upd(cache["vs"], vs)}
+    return {"k": upd(cache["k"], k), "v": upd(cache["v"], v)}
+
+
+def _cache_read(cfg, cache, dtype):
+    if cfg.kv_cache_dtype == "int8":
+        k = cache["k"].astype(dtype) * cache["ks"][..., None].astype(dtype)
+        v = cache["v"].astype(dtype) * cache["vs"][..., None].astype(dtype)
+        return k, v
+    return cache["k"], cache["v"]
+
+
+def attn_apply(p, x, cfg: ModelConfig, *, mode="train", cache=None, pos=None,
+               positions=None, cross_kv=None):
+    """mode: train | prefill | decode.  pos: scalar abs position (decode).
+    cross_kv: (k, v) tuple for encoder-decoder cross attention (no rope)."""
+    B, S, D = x.shape
+    H, KVH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = linear(p["wq"], x).reshape(B, S, H, Dh)
+    if cross_kv is None:
+        k = linear(p["wk"], x).reshape(B, S, KVH, Dh)
+        v = linear(p["wv"], x).reshape(B, S, KVH, Dh)
+    else:
+        k, v = cross_kv
+
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        if cross_kv is None:
+            k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+
+    if cross_kv is None:
+        if positions is None:
+            positions = (jnp.arange(S)[None, :] if mode != "decode"
+                         else jnp.full((B, 1), pos))
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if cross_kv is not None:
+        o = chunked_attention(q, k, v, causal=False, softcap=cfg.attn_softcap,
+                              score_shard=cfg.attn_score_shard)
+    elif mode == "train":
+        o = chunked_attention(q, k, v, causal=True, window=cfg.window,
+                              softcap=cfg.attn_softcap,
+                              score_shard=cfg.attn_score_shard)
+    elif mode == "prefill":
+        o = chunked_attention(q, k, v, causal=True, window=cfg.window,
+                              softcap=cfg.attn_softcap,
+                              score_shard=cfg.attn_score_shard)
+        span = cache["k"].shape[1]
+        if cfg.window and S > span:                 # keep only the last window
+            k_keep, v_keep = k[:, -span:], v[:, -span:]
+            # ring-align so that slot (pos % span) is consistent with decode
+            shift = S % span
+            k_keep = jnp.roll(k_keep, shift, axis=1)
+            v_keep = jnp.roll(v_keep, shift, axis=1)
+            new_cache = _cache_write(cfg, cache, k_keep, v_keep, 0)
+        else:
+            new_cache = _cache_write(cfg, cache, k, v, 0)
+    else:  # decode
+        span = cache["k"].shape[1]
+        slot = pos % span if cfg.window else pos
+        new_cache = _cache_write(cfg, cache, k, v, slot)
+        ck, cv = _cache_read(cfg, new_cache, x.dtype)
+        ck_ = constrain(ck, "batch", "kv_seq", None, None)
+        cv_ = constrain(cv, "batch", "kv_seq", None, None)
+        if cfg.window:
+            # ring buffer: absolute position of slot i is recoverable; mask
+            # invalid (future/unwritten) slots via kv_len trick on ring index.
+            k_pos_abs = pos - ((slot - jnp.arange(span)) % span)
+            m = (k_pos_abs >= 0) & (k_pos_abs >= pos - (cfg.window - 1))
+            qg = q.reshape(B, 1, KVH, H // KVH, Dh)
+            o = attention_scores_ctx(qg, ck_, cv_, m[None, None, None, None, :],
+                                     cfg.attn_softcap).reshape(B, 1, H, Dh)
+        else:
+            o = chunked_attention(q, ck_, cv_, causal=True, q_offset=pos,
+                                  kv_len=pos + 1, softcap=cfg.attn_softcap)
+
+    o = o.reshape(B, S, H * Dh)
+    return linear(p["wo"], o), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, cfg: ModelConfig, dtype, d_ff=None, gated=True):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    if gated:
+        return {
+            "w1": linear_init(ks[0], d, f, dtype),
+            "w3": linear_init(ks[1], d, f, dtype),
+            "w2": linear_init(ks[2], f, d, dtype),
+        }
+    return {"w1": linear_init(ks[0], d, f, dtype),
+            "w2": linear_init(ks[2], f, d, dtype)}
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    act = act_fn(cfg.act)
+    h = act(linear(p["w1"], x))
+    if "w3" in p:
+        h = h * linear(p["w3"], x)
+    h = constrain(h, "batch", None, "tensor")
+    return linear(p["w2"], h)
+
+
+# ---------------------------------------------------------------------------
+# Sharded cross-entropy (never materialises a replicated [tokens, vocab])
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, mask=None):
+    """logits: (B, S, V) (vocab may be sharded over 'tensor'); labels: (B, S).
+
+    The gold logit is extracted with a compare-mask reduction rather than
+    take_along_axis: a gather along the sharded vocab axis would make GSPMD
+    all-gather the full logits per device (~GiB at 32k x 150k vocab), while
+    the masked reduction stays a partial sum + psum."""
+    logits = constrain(logits, "batch", None, "tensor")
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    onehot = vocab_iota == labels[..., None]
+    gold = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import Optimizer, sgd, adamw, TrainState
+from repro.optim.schedules import (
+    constant, cosine_decay, wsd, rsqrt, warmup_linear,
+)
+
+__all__ = ["Optimizer", "sgd", "adamw", "TrainState", "constant",
+           "cosine_decay", "wsd", "rsqrt", "warmup_linear"]

@@ -1,0 +1,104 @@
+"""Hand-rolled functional optimizers (no optax in the offline container).
+
+Client local training uses plain SGD (paper Algorithm 1); the centralised /
+cohort driver may use AdamW with any schedule from schedules.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: PyTree
+    opt_state: PyTree
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], tuple[PyTree, PyTree]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+    def init_state(self, params: PyTree) -> TrainState:
+        return TrainState(jnp.zeros((), jnp.int32), params, self.init(params))
+
+    def apply(self, state: TrainState, grads: PyTree) -> TrainState:
+        new_params, new_opt = self.update(grads, state.opt_state,
+                                          state.params, state.step)
+        return TrainState(state.step + 1, new_params, new_opt)
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    use_mom = momentum != 0.0
+
+    def init(params):
+        if not use_mom:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, opt_state, params, step):
+        lr_ = _lr_at(lr, step)
+
+        def upd(p, g, m=None):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            if m is None:
+                return (p.astype(jnp.float32) - lr_ * g).astype(p.dtype), None
+            m_new = momentum * m + g
+            d = g + momentum * m_new if nesterov else m_new
+            return (p.astype(jnp.float32) - lr_ * d).astype(p.dtype), m_new
+
+        if not use_mom:
+            new_params = jax.tree.map(lambda p, g: upd(p, g)[0], params, grads)
+            return new_params, ()
+        out = jax.tree.map(lambda p, g, m: upd(p, g, m), params, grads,
+                           opt_state, is_leaf=lambda x: x is None)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mom = jax.tree.map(lambda o: o[1], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, new_mom
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, opt_state, params, step):
+        lr_ = _lr_at(lr, step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            d = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            if weight_decay:
+                d = d + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_ * d).astype(p.dtype), m_new, v_new
+
+        out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2)}
+
+    return Optimizer(init, update)

@@ -1,0 +1,55 @@
+"""LR schedules, including WSD (warmup-stable-decay) used by minicpm-2b.
+
+All schedules are step -> lr callables usable directly as the `lr` argument
+of repro.optim.sgd / adamw (traced-safe: pure jnp).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_linear(lr: float, warmup_steps: int):
+    def f(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        return lr * jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+    return f
+
+
+def cosine_decay(lr: float, total_steps: int, warmup_steps: int = 0,
+                 final_frac: float = 0.1):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * warm * cos
+    return f
+
+
+def wsd(lr: float, total_steps: int, warmup_frac: float = 0.01,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """MiniCPM's Warmup-Stable-Decay: linear warmup, long plateau, sharp
+    exponential-style decay over the last `decay_frac` of training."""
+    warmup = max(1, int(total_steps * warmup_frac))
+    decay_start = int(total_steps * (1.0 - decay_frac))
+
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1.0) / warmup)
+        prog = jnp.clip((s - decay_start) / max(total_steps - decay_start, 1),
+                        0.0, 1.0)
+        decay = final_frac ** prog          # exponential anneal to final_frac
+        return lr * warm * decay
+    return f
+
+
+def rsqrt(lr: float, warmup_steps: int = 1000):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32) + 1.0
+        return lr * jnp.minimum(s / warmup_steps, jnp.sqrt(warmup_steps / s))
+    return f

@@ -1,0 +1,203 @@
+"""Deterministic event-driven FL cluster simulator.
+
+Reproduces the paper's two heterogeneity testbeds:
+  * §III preliminary study — per-epoch idle gaps ~ Zipf(s=1.7, max 60 s)
+  * §VI evaluation        — per-client speed multipliers ~ Pareto (heavy tail)
+
+plus link latencies and optional fault injection (client crash/recovery).
+Simulated seconds are the wall-clock metric of every paper-figure benchmark;
+learning itself is real (lazy local SGD at upload time), so time-to-accuracy
+curves are true learning curves under simulated cluster timing.
+
+On a real TPU fleet the same SeaflServer object is driven by the cohort
+scheduler in repro/launch/train.py instead of this simulator.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.client import Client
+from repro.core.server import FLConfig, SeaflServer
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    speed_model: str = "pareto"        # pareto | zipf
+    base_epoch_time: float = 1.0       # seconds per epoch on the fastest device
+    pareto_shape: float = 1.5
+    zipf_s: float = 1.7
+    zipf_max: float = 60.0             # paper §III: idle capped at 60 s
+    down_latency: float = 0.1
+    up_latency: float = 0.1
+    fail_prob: float = 0.0             # per-dispatch crash probability
+    recover_after: float = 30.0
+    seed: int = 0
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)
+    data: dict = field(compare=False, default_factory=dict)
+    valid: bool = field(compare=False, default=True)
+
+
+@dataclass
+class InFlight:
+    cid: int
+    version: int
+    epoch_ends: list[float]
+    upload_event: _Event
+    n_epochs_at_upload: int
+    notified: bool = False
+
+
+class FLSimulation:
+    def __init__(self, server: SeaflServer, clients: dict[int, Client],
+                 sim_cfg: SimConfig,
+                 eval_fn: Optional[Callable[[PyTree], float]] = None,
+                 eval_every: int = 1):
+        self.server = server
+        self.clients = clients
+        self.cfg = sim_cfg
+        self.eval_fn = eval_fn
+        self.eval_every = eval_every
+        self._rng = np.random.default_rng(sim_cfg.seed)
+        self._heap: list[_Event] = []
+        self._seq = itertools.count()
+        self._inflight: dict[int, InFlight] = {}
+        self.now = 0.0
+        self.history: list[dict] = []
+        # per-client static speed multiplier (Pareto heavy tail, paper §VI)
+        self._speed = {
+            cid: float(self._rng.pareto(sim_cfg.pareto_shape) + 1.0)
+            for cid in clients
+        }
+
+    # ------------------------------------------------------------ timing
+    def _idle_gap(self) -> float:
+        if self.cfg.speed_model != "zipf":
+            return 0.0
+        z = float(self._rng.zipf(self.cfg.zipf_s))
+        return min(z, self.cfg.zipf_max)
+
+    def _epoch_time(self, cid: int) -> float:
+        mult = self._speed[cid] if self.cfg.speed_model == "pareto" else 1.0
+        jitter = 1.0 + 0.05 * self._rng.standard_normal()
+        return max(1e-3, self.cfg.base_epoch_time * mult * abs(jitter)) \
+            + self._idle_gap()
+
+    def _push(self, time: float, kind: str, **data) -> _Event:
+        ev = _Event(time, next(self._seq), kind, data)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    # ---------------------------------------------------------- dispatch
+    def _dispatch(self, cid: int):
+        E = self.server.cfg.local_epochs
+        t0 = self.now + self.cfg.down_latency
+        ends, t = [], t0
+        for _ in range(E):
+            t += self._epoch_time(cid)
+            ends.append(t)
+        if self.cfg.fail_prob > 0 and self._rng.random() < self.cfg.fail_prob:
+            fail_at = t0 + self._rng.uniform(0, max(ends[-1] - t0, 1e-3))
+            self._push(fail_at, "fail", cid=cid)
+        ev = self._push(ends[-1] + self.cfg.up_latency, "upload", cid=cid)
+        self._inflight[cid] = InFlight(
+            cid=cid, version=self.server.round, epoch_ends=ends,
+            upload_event=ev, n_epochs_at_upload=E)
+
+    def _notify(self, cid: int):
+        """Server NOTIFY (SEAFL², Algorithm 2): arrives after down link."""
+        self._push(self.now + self.cfg.down_latency, "notify", cid=cid)
+
+    def _handle_notify(self, cid: int):
+        fl = self._inflight.get(cid)
+        if fl is None or fl.notified:
+            return
+        fl.notified = True
+        # finish only the epoch in progress, then upload immediately
+        done = [e for e in fl.epoch_ends if e <= self.now]
+        nxt = next((e for e in fl.epoch_ends if e > self.now), None)
+        if nxt is None:                        # already finished training
+            return
+        fl.upload_event.valid = False
+        fl.n_epochs_at_upload = max(1, len(done) + 1)
+        fl.upload_event = self._push(nxt + self.cfg.up_latency, "upload",
+                                     cid=cid)
+
+    # ------------------------------------------------------------ upload
+    def _handle_upload(self, cid: int):
+        fl = self._inflight.pop(cid, None)
+        if fl is None:
+            return
+        base = self.server.params_at(fl.version)
+        client = self.clients[cid]
+        w, loss = client.local_train(base, fl.n_epochs_at_upload,
+                                     self.server.cfg.local_lr)
+        agg = self.server.on_update(cid, w, fl.n_epochs_at_upload,
+                                    recv_time=self.now)
+        if agg is not None:
+            self._on_aggregation(agg, loss)
+
+    def _on_aggregation(self, agg, last_loss: float):
+        rec = {"time": self.now, "round": agg.round,
+               "staleness_mean": float(np.mean(agg.staleness)),
+               "staleness_max": float(np.max(agg.staleness)),
+               "loss": last_loss}
+        if self.eval_fn is not None and (agg.round % self.eval_every == 0):
+            rec["acc"] = float(self.eval_fn(self.server.params))
+        self.history.append(rec)
+        for cid in agg.notify:
+            self._notify(cid)
+        for cid in agg.dispatch:
+            self._dispatch(cid)
+
+    # --------------------------------------------------------------- run
+    def run(self, max_time: float = 1e9, max_rounds: int = 10_000,
+            target_acc: Optional[float] = None) -> list[dict]:
+        for cid in self.server.start():
+            self._dispatch(cid)
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            if not ev.valid:
+                continue
+            self.now = ev.time
+            if self.now > max_time or self.server.round >= max_rounds:
+                break
+            if ev.kind == "upload":
+                self._handle_upload(ev.data["cid"])
+            elif ev.kind == "notify":
+                self._handle_notify(ev.data["cid"])
+            elif ev.kind == "fail":
+                cid = ev.data["cid"]
+                fl = self._inflight.pop(cid, None)
+                if fl is not None:
+                    fl.upload_event.valid = False
+                    for c in self.server.mark_failed(cid):
+                        self._dispatch(c)
+                    self._push(self.now + self.cfg.recover_after,
+                               "recover", cid=cid)
+            elif ev.kind == "recover":
+                self.server.recover(ev.data["cid"])
+            if target_acc is not None and self.history:
+                accs = [h.get("acc", 0.0) for h in self.history]
+                if accs and max(accs) >= target_acc:
+                    break
+        return self.history
+
+    # ------------------------------------------------------------ metrics
+    def time_to_accuracy(self, target: float) -> Optional[float]:
+        for h in self.history:
+            if h.get("acc", 0.0) >= target:
+                return h["time"]
+        return None

@@ -1,0 +1,242 @@
+"""Logical-axis sharding utilities.
+
+Models annotate tensors with *logical* axis names ("batch", "embed", "mlp",
+"vocab", ...).  A :class:`AxisRules` table maps logical names to physical mesh
+axes.  This indirection lets the same model code run on:
+
+  * a single CPU device (tests, benchmarks)            -> no constraints
+  * the single-pod production mesh  (data=16, model=16)
+  * the multi-pod production mesh   (pod=2, data=16, model=16)
+  * elastic meshes of any shape (fault-tolerance tests use 4-8 host devices)
+
+The rules live in a context variable so that library code never hard-codes
+mesh axis names.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "AxisRules",
+    "axis_rules",
+    "current_rules",
+    "logical_spec",
+    "constrain",
+    "param_pspecs",
+    "named_sharding",
+    "DEFAULT_RULES",
+]
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    """Mapping from logical axis names to physical mesh axis (tuples)."""
+
+    rules: Mapping[str, tuple[str, ...] | str | None] = field(default_factory=dict)
+    mesh_axes: tuple[str, ...] = ()
+    mesh: Mesh | None = None
+
+    def resolve(self, name: str | None):
+        if name is None:
+            return None
+        phys = self.rules.get(name, None)
+        if phys is None:
+            return None
+        if isinstance(phys, str):
+            phys = (phys,)
+        # Drop axes that are not present on the current mesh (elastic meshes).
+        phys = tuple(a for a in phys if a in self.mesh_axes)
+        if not phys:
+            return None
+        return phys if len(phys) > 1 else phys[0]
+
+    def spec(self, *names: str | None) -> P:
+        return P(*[self.resolve(n) for n in names])
+
+
+# Logical-axis convention used across the model zoo:
+#   batch   - global batch                  -> ("pod", "data")
+#   fsdp    - parameter reduction dims      -> ("data",)   (ZeRO-style)
+#   tensor  - parameter parallel dims       -> ("model",)
+#   expert  - MoE expert dim                -> replicated (FSDP'd via fsdp dim)
+#   kv_seq  - long KV-cache sequence dim    -> ("model",)  (flash-decode style)
+#   buffer  - SEAFL update-buffer slot dim  -> ("pod",)    (slots live per pod)
+DEFAULT_RULES: dict[str, tuple[str, ...] | None] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "tensor": ("model",),
+    "expert": None,
+    "kv_seq": ("model",),
+    "buffer": ("pod",),
+    "seq": None,
+    "embed": None,
+    "heads": ("model",),
+    # residual stream at layer boundaries: sharding d_model over 'model'
+    # shrinks the per-layer saved-carry stack (remat residuals) 16x; GSPMD
+    # all-gathers at the next contraction (activation-FSDP).
+    "resid": ("model",),
+    # query-chunk rows inside blocked attention (context parallel scores)
+    "attn_q": ("model",),
+}
+
+_local = threading.local()
+
+
+def current_rules() -> AxisRules:
+    return getattr(_local, "rules", AxisRules({}, ()))
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh | None, overrides: Mapping[str, tuple[str, ...] | None] | None = None):
+    """Install logical->physical axis rules for the given mesh."""
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    mesh_axes = tuple(mesh.axis_names) if mesh is not None else ()
+    prev = getattr(_local, "rules", None)
+    _local.rules = AxisRules(rules, mesh_axes, mesh)
+    try:
+        yield _local.rules
+    finally:
+        if prev is None:
+            del _local.rules
+        else:
+            _local.rules = prev
+
+
+def logical_spec(*names: str | None) -> P:
+    return current_rules().spec(*names)
+
+
+def axis_size(name: str) -> int:
+    """Product of mesh-axis sizes a logical axis maps to (1 off-mesh)."""
+    rules = current_rules()
+    if rules.mesh is None:
+        return 1
+    resolved = rules.resolve(name)
+    if resolved is None:
+        return 1
+    axes = (resolved,) if isinstance(resolved, str) else tuple(resolved)
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+    total = 1
+    for a in axes:
+        total *= sizes.get(a, 1)
+    return total
+
+
+def constrain(x, *names: str | None):
+    """with_sharding_constraint by logical axis names (no-op off-mesh)."""
+    rules = current_rules()
+    if not rules.mesh_axes or rules.mesh is None:
+        return x
+    spec = rules.spec(*names)
+    if all(s is None for s in spec):
+        return x
+    # drop constraints on dims that do not divide the mesh axes (GSPMD would
+    # pad; for activations we prefer replication over padded shards)
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+    fixed = []
+    for dim, s in zip(x.shape, spec):
+        if s is None:
+            fixed.append(None)
+            continue
+        axes = (s,) if isinstance(s, str) else tuple(s)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        fixed.append(s if dim % total == 0 else None)
+    if all(s is None for s in fixed):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*fixed)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules: path-regex -> logical axes per dim.
+# ---------------------------------------------------------------------------
+
+# Order matters: first match wins.  Paths are '/'-joined dict keys.  A leading
+# stack dim (from lax.scan layer stacking) is detected by rank mismatch and
+# left unsharded.
+PARAM_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    # vocab-parallel only: FSDP'ing d_model here would make the unembed a
+    # doubly-sharded contraction -> GSPMD emits full-vocab partial dots +
+    # all-reduce (GiBs).  Replicating d costs ~100 MB/device at most.
+    (r"(^|/)embed/w$", ("tensor", None)),           # (vocab, d_model)
+    (r"(^|/)unembed/w$", (None, "tensor")),         # (d_model, vocab)
+    (r"(wq|wk|wv|wkv|wqkv)/w$", ("fsdp", "tensor")),
+    (r"wo/w$", ("tensor", "fsdp")),
+    (r"(w_dkv|w_dq)/w$", ("fsdp", "tensor")),       # MLA down-projections
+    (r"(w_uk|w_uv|w_uq)/w$", ("fsdp", "tensor")),   # MLA up-projections
+    (r"(w1|w3|w13|wi)/w$", ("fsdp", "tensor")),     # MLP in
+    (r"(w2|wo_mlp)/w$", ("tensor", "fsdp")),        # MLP out
+    (r"router/w$", ("fsdp", None)),                 # (d_model, E)
+    (r"experts/(w1|w3|w13)$", ("expert", "fsdp", "tensor")),
+    (r"experts/w2$", ("expert", "tensor", "fsdp")),
+    (r"shared/(w1|w3|w13)/w$", ("fsdp", "tensor")),
+    (r"shared/w2/w$", ("tensor", "fsdp")),
+    (r"(in_proj|x_proj)/w$", ("fsdp", "tensor")),   # ssm/rglru input projections
+    (r"out_proj/w$", ("tensor", "fsdp")),
+    (r"conv/w$", (None, "tensor")),                 # (width, channels)
+    (r"conv/b$", ("tensor",)),
+    (r"(a_param|a_gate|x_gate)/w$", ("fsdp", "tensor")),
+    (r"(a_log|dt_bias|D)$", ("tensor",)),           # per-channel / per-head ssm params
+    (r"rg_a$", ("tensor",)),
+    (r"patch_proj/w$", (None, "fsdp")),
+    (r"(scale|bias|b)$", (None,)),                  # norms & biases: replicated
+    (r".*", (None,)),
+]
+
+
+def _spec_for_path(path: str, shape: tuple[int, ...], rules: AxisRules) -> P:
+    sizes = (dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+             if rules.mesh is not None else {})
+    for pat, axes in PARAM_RULES:
+        if re.search(pat, path):
+            names = list(axes)
+            if len(names) < len(shape):
+                # stacked-layer leading dims -> unsharded
+                names = [None] * (len(shape) - len(names)) + names
+            elif len(names) > len(shape):
+                names = names[-len(shape):] if len(shape) > 0 else []
+            resolved = [rules.resolve(n) for n in names]
+            # in_shardings require exact divisibility: replicate any dim
+            # that does not divide its mesh axes.
+            for i, (r, s) in enumerate(zip(resolved, shape)):
+                if r is None:
+                    continue
+                ax = (r,) if isinstance(r, str) else tuple(r)
+                total = 1
+                for a in ax:
+                    total *= sizes.get(a, 1)
+                if s % total != 0 or s == 1:
+                    resolved[i] = None
+            return P(*resolved)
+    return P()
+
+
+def param_pspecs(params, rules: AxisRules | None = None):
+    """Build a PartitionSpec pytree mirroring ``params`` (dict-of-dict tree)."""
+    rules = rules or current_rules()
+
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else k) for k, v in node.items()}
+        shape = tuple(getattr(node, "shape", ()))
+        return _spec_for_path(prefix, shape, rules)
+
+    return walk(params, "")
+
+
+def named_sharding(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

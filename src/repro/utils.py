@@ -1,0 +1,166 @@
+"""Small shared utilities: pytree algebra, RNG, counting, timing."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Pytree linear algebra (the FL server works on whole-model pytrees).
+# ---------------------------------------------------------------------------
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_lerp(a: PyTree, b: PyTree, t) -> PyTree:
+    """(1 - t) * a + t * b   (Eq. 8 mixing)."""
+    return jax.tree.map(lambda x, y: (1.0 - t) * x + t * y, a, b)
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jnp.ndarray:
+    # Multi-dim dot_general with f32 accumulation: never materialises f32
+    # upcasts of bf16 leaves, and never ravels (a 1-D reshape of a 2-D
+    # sharded leaf is unrepresentable for GSPMD and triggers full
+    # replication of the buffer).
+    def leaf_dot(x, y):
+        dims = tuple(range(x.ndim))
+        return jax.lax.dot_general(
+            x, y, ((dims, dims), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    parts = jax.tree.leaves(jax.tree.map(leaf_dot, a, b))
+    return jnp.sum(jnp.stack(parts)) if parts else jnp.float32(0.0)
+
+
+def tree_sqnorm(a: PyTree) -> jnp.ndarray:
+    return tree_dot(a, a)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_stack(trees: list[PyTree]) -> PyTree:
+    """Stack a list of identical pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: PyTree, n: int) -> list[PyTree]:
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_weighted_sum(stacked: PyTree, weights: jnp.ndarray) -> PyTree:
+    """sum_k w[k] * stacked[k] where every leaf has leading dim K.
+
+    Contracted with dot_general + f32 accumulation so bf16 buffers are never
+    upcast in full (K whole-model f32 copies otherwise)."""
+
+    def ws(leaf):
+        out = jax.lax.dot_general(
+            weights.astype(leaf.dtype), leaf, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return out.astype(leaf.dtype)
+
+    return jax.tree.map(ws, stacked)
+
+
+def tree_bytes(a: PyTree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_size(a: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(a))
+
+
+def tree_flatten_concat(a: PyTree, dtype=jnp.float32) -> jnp.ndarray:
+    """Flatten a pytree into one 1-D vector (host-side / small models only)."""
+    leaves = jax.tree.leaves(a)
+    return jnp.concatenate([jnp.ravel(x).astype(dtype) for x in leaves])
+
+
+def tree_unflatten_concat(flat: jnp.ndarray, like: PyTree) -> PyTree:
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        out.append(flat[off:off + n].reshape(leaf.shape).astype(leaf.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_paths(a: PyTree) -> list[str]:
+    paths = []
+
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(node[k], f"{prefix}/{k}" if prefix else k)
+        else:
+            paths.append(prefix)
+
+    walk(a, "")
+    return paths
+
+
+def tree_isfinite(a: PyTree) -> jnp.ndarray:
+    parts = [jnp.all(jnp.isfinite(x.astype(jnp.float32))) for x in jax.tree.leaves(a)]
+    return jnp.all(jnp.stack(parts)) if parts else jnp.bool_(True)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def fold_rng(rng: jax.Array, *data: int) -> jax.Array:
+    for d in data:
+        rng = jax.random.fold_in(rng, d)
+    return rng
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"
+
+
+def human_count(n: float) -> str:
+    for unit in ("", "K", "M", "B", "T"):
+        if abs(n) < 1000.0:
+            return f"{n:.2f}{unit}"
+        n /= 1000.0
+    return f"{n:.2f}Q"

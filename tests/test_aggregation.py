@@ -1,0 +1,161 @@
+"""Unit + property tests for the SEAFL aggregation math (paper Eqs. 4-8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (
+    SeaflHyper, staleness_factor, importance_factor, seafl_weights,
+    update_similarities, aggregate, mix, seafl_aggregate,
+    fedavg_aggregate, fedbuff_aggregate, fedasync_aggregate, fedasync_mixing,
+)
+from repro.utils import tree_stack, tree_sub
+
+HYPER = SeaflHyper(alpha=3.0, mu=1.0, beta=10.0, theta=0.8)
+
+
+# ---------------------------------------------------------------- Eq. (4)
+
+@given(st.floats(0.0, 10.0), st.floats(0.5, 20.0), st.floats(1.0, 50.0))
+@settings(max_examples=50, deadline=None)
+def test_staleness_factor_bounds(s, alpha, beta):
+    """gamma in (0, alpha]; equals alpha at staleness 0; alpha/2 at s=beta."""
+    g = float(staleness_factor(min(s, beta), alpha, beta))
+    assert 0.0 < g <= alpha * (1 + 1e-5) + 1e-6
+    assert g >= alpha / 2.0 * (1 - 1e-5) - 1e-6   # staleness <= beta (Lemma 1)
+
+
+def test_staleness_factor_monotone():
+    s = jnp.arange(0, 11, dtype=jnp.float32)
+    g = staleness_factor(s, 3.0, 10.0)
+    assert bool(jnp.all(jnp.diff(g) < 0))
+    assert np.isclose(float(g[0]), 3.0)
+    assert np.isclose(float(g[10]), 1.5)    # alpha*beta/(beta+beta)
+
+
+# ---------------------------------------------------------------- Eq. (5)
+
+@given(st.floats(-1.0, 1.0), st.floats(0.0, 5.0))
+@settings(max_examples=50, deadline=None)
+def test_importance_bounds(cos, mu):
+    s = float(importance_factor(cos, mu))
+    assert 0.0 - 1e-6 <= s <= mu + 1e-6
+
+
+def test_cosine_from_pytrees():
+    rng = np.random.default_rng(0)
+    g = {"a": jnp.asarray(rng.normal(size=(5, 3)).astype(np.float32)),
+         "b": jnp.asarray(rng.normal(size=(7,)).astype(np.float32))}
+    deltas = [
+        jax.tree.map(lambda x: 2.0 * x, g),            # cos = +1
+        jax.tree.map(lambda x: -0.5 * x, g),           # cos = -1
+    ]
+    cos = update_similarities(tree_stack(deltas), g)
+    np.testing.assert_allclose(np.asarray(cos), [1.0, -1.0], atol=1e-5)
+
+
+# ---------------------------------------------------------------- Eq. (6)
+
+@given(
+    st.lists(st.integers(1, 1000), min_size=2, max_size=16),
+    st.data(),
+)
+@settings(max_examples=50, deadline=None)
+def test_weights_normalised_and_lemma1(sizes, data):
+    K = len(sizes)
+    staleness = data.draw(st.lists(st.floats(0, 10.0), min_size=K, max_size=K))
+    cos = data.draw(st.lists(st.floats(-1, 1), min_size=K, max_size=K))
+    p = np.asarray(seafl_weights(np.array(sizes, np.float32),
+                                 np.array(staleness, np.float32),
+                                 np.array(cos, np.float32), HYPER))
+    assert np.isclose(p.sum(), 1.0, atol=1e-5)
+    assert (p >= 0).all()
+    # Lemma 1 (pre-normalisation form): p_k proportional to d_k*(gamma+s)
+    # with gamma+s in [alpha/2, alpha+mu] when staleness <= beta.
+    d = np.array(sizes, np.float64) / np.sum(sizes)
+    lo = d * HYPER.alpha / 2
+    hi = d * (HYPER.alpha + HYPER.mu)
+    unnorm = p / p.sum()
+    ratio = unnorm / d
+    denom = (ratio * d).sum()
+    # the normalised weight ratio stays within the Lemma-1 envelope ratio
+    assert ratio.max() / ratio.min() <= (HYPER.alpha + HYPER.mu) / (HYPER.alpha / 2) + 1e-3
+
+
+# ------------------------------------------------------------ Eq. (7)+(8)
+
+def test_aggregate_and_mix():
+    w1 = {"w": jnp.array([1.0, 0.0])}
+    w2 = {"w": jnp.array([0.0, 1.0])}
+    stacked = tree_stack([w1, w2])
+    out = aggregate(stacked, jnp.array([0.25, 0.75]))
+    np.testing.assert_allclose(np.asarray(out["w"]), [0.25, 0.75], atol=1e-6)
+    g = {"w": jnp.array([1.0, 1.0])}
+    mixed = mix(g, out, 0.8)
+    np.testing.assert_allclose(np.asarray(mixed["w"]),
+                               [0.2 + 0.8 * 0.25, 0.2 + 0.8 * 0.75], atol=1e-6)
+    unchanged = mix(g, out, 0.0)
+    np.testing.assert_allclose(np.asarray(unchanged["w"]), [1, 1], atol=1e-6)
+
+
+def test_seafl_degenerates_to_uniform():
+    """Paper §V: with p_k = 1/K SEAFL matches FedBuff's aggregation form.
+    Equal data sizes + importance/staleness disabled -> uniform weights."""
+    hyper = SeaflHyper(use_importance=False, use_staleness=False)
+    p = seafl_weights(np.full(4, 10.0), np.zeros(4), np.zeros(4), hyper)
+    np.testing.assert_allclose(np.asarray(p), np.full(4, 0.25), atol=1e-6)
+
+
+def test_seafl_aggregate_end_to_end():
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.normal(size=(32,)).astype(np.float32))}
+    clients = [jax.tree.map(lambda x: x + 0.1 * i, g) for i in range(1, 4)]
+    stacked = tree_stack(clients)
+    deltas = tree_stack([tree_sub(c, g) for c in clients])
+    new_g, diag = seafl_aggregate(g, stacked, deltas,
+                                  np.array([10., 20., 30.]),
+                                  np.array([0., 2., 8.]), HYPER)
+    assert np.isfinite(np.asarray(new_g["w"])).all()
+    p = np.asarray(diag["weights"])
+    assert np.isclose(p.sum(), 1.0, atol=1e-5)
+    # staler client with equal data would get less weight; here staleness
+    # increases with data size, so just verify the gamma ordering effect:
+    gamma = 3.0 * 10.0 / (np.array([0., 2., 8.]) + 10.0)
+    d = np.array([10., 20., 30.]) / 60.0
+    cos = np.asarray(diag["cos"])
+    s = 1.0 * (np.clip(cos, -1, 1) + 1) / 2
+    expect = d * (gamma + s)
+    expect /= expect.sum()
+    np.testing.assert_allclose(p, expect, atol=1e-4)
+
+
+# ---------------------------------------------------------------- baselines
+
+def test_fedavg_weighted_by_data():
+    w1 = {"w": jnp.array([1.0])}
+    w2 = {"w": jnp.array([3.0])}
+    out = fedavg_aggregate(tree_stack([w1, w2]), np.array([1.0, 3.0]))
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.5], atol=1e-6)
+
+
+def test_fedbuff_mean_delta():
+    g = {"w": jnp.array([1.0])}
+    deltas = tree_stack([{"w": jnp.array([1.0])}, {"w": jnp.array([3.0])}])
+    out = fedbuff_aggregate(g, deltas, 1.0)
+    np.testing.assert_allclose(np.asarray(out["w"]), [3.0], atol=1e-6)
+
+
+@given(st.floats(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_fedasync_mixing_decays(s):
+    a = float(fedasync_mixing(s, 0.6, 0.5))
+    assert 0 < a <= 0.6 + 1e-6
+    assert a <= float(fedasync_mixing(0.0, 0.6, 0.5)) + 1e-9
+
+
+def test_fedasync_aggregate():
+    g = {"w": jnp.array([0.0])}
+    c = {"w": jnp.array([1.0])}
+    out = fedasync_aggregate(g, c, 0.0, 0.6, 0.5)
+    np.testing.assert_allclose(np.asarray(out["w"]), [0.6], atol=1e-6)

@@ -1,0 +1,90 @@
+"""Checkpointer: atomicity, GC, integrity, bf16, restore, async save."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, save_tree, load_tree
+
+
+@pytest.fixture
+def tree():
+    return {"a": jnp.ones((3, 4), jnp.bfloat16),
+            "b": {"c": jnp.arange(5), "d": jnp.linspace(0, 1, 7)}}
+
+
+def test_roundtrip_with_structure(tmp_path, tree):
+    p = str(tmp_path / "ck")
+    save_tree(p, tree, {"round": 7})
+    out, extra = load_tree(p, like=tree)
+    assert extra["round"] == 7
+    assert out["a"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out["b"]["d"]),
+                               np.asarray(tree["b"]["d"]))
+
+
+def test_roundtrip_without_like(tmp_path, tree):
+    p = str(tmp_path / "ck")
+    save_tree(p, tree)
+    out, _ = load_tree(p)
+    np.testing.assert_array_equal(np.asarray(out["b"]["c"]),
+                                  np.arange(5))
+
+
+def test_crc_detects_corruption(tmp_path, tree):
+    p = str(tmp_path / "ck")
+    save_tree(p, tree)
+    # corrupt the arrays file
+    f = os.path.join(p, "arrays.npz")
+    data = bytearray(open(f, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(f, "wb").write(bytes(data))
+    with pytest.raises(Exception):
+        load_tree(p, like=tree)
+
+
+def test_atomic_commit_never_corrupts_latest(tmp_path, tree):
+    """A stale .tmp dir from a crashed save must not break a later save."""
+    p = str(tmp_path / "ck")
+    os.makedirs(p + ".tmp")
+    open(os.path.join(p + ".tmp", "junk"), "w").write("crash residue")
+    save_tree(p, tree)
+    out, _ = load_tree(p, like=tree)
+    assert out["a"].shape == (3, 4)
+
+
+def test_keep_last_k_gc(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    for s in [1, 2, 3, 4]:
+        ck.save(s, tree, {"s": s})
+    assert ck.steps() == [3, 4]
+    step, out, extra = ck.restore(like=tree)
+    assert step == 4 and extra["s"] == 4
+
+
+def test_async_save_then_restore(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path), keep=3, async_save=True)
+    ck.save(1, tree, {"s": 1})
+    ck.wait()
+    step, out, extra = ck.restore(like=tree)
+    assert step == 1
+    np.testing.assert_allclose(np.asarray(out["a"], np.float32), 1.0)
+
+
+def test_restore_specific_step(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path), keep=5, async_save=False)
+    for s in [1, 2, 3]:
+        t = jax.tree.map(lambda x: x * s, tree)
+        ck.save(s, t, {"s": s})
+    step, out, extra = ck.restore(step=2, like=tree)
+    assert step == 2
+    np.testing.assert_allclose(np.asarray(out["a"], np.float32), 2.0)
+
+
+def test_empty_restore(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    step, out, extra = ck.restore(like=tree)
+    assert step is None and out is None

@@ -1,0 +1,74 @@
+"""Gradient-compression substrate: top-k+EF, int8, server integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.compression import (
+    TopKCompressor, Int8Compressor, ErrorFeedback, make_compressor,
+)
+
+
+@given(st.integers(10, 500), st.floats(0.05, 0.5))
+@settings(max_examples=20, deadline=None)
+def test_topk_keeps_largest(n, ratio):
+    rng = np.random.default_rng(n)
+    x = {"w": jnp.asarray(rng.normal(size=n).astype(np.float32))}
+    c = TopKCompressor(ratio)
+    approx, nbytes = c.roundtrip(x)
+    k = max(1, int(n * ratio))
+    kept = np.count_nonzero(np.asarray(approx["w"]))
+    assert kept <= k
+    # kept entries are exactly the largest-|.| entries
+    xa = np.abs(np.asarray(x["w"]))
+    thresh = np.sort(xa)[-k]
+    nz = np.asarray(approx["w"]) != 0
+    assert (xa[nz] >= thresh - 1e-6).all()
+    assert nbytes == k * 8
+
+
+@given(st.integers(5, 300))
+@settings(max_examples=20, deadline=None)
+def test_int8_error_bound(n):
+    rng = np.random.default_rng(n)
+    x = {"w": jnp.asarray(rng.normal(size=n).astype(np.float32))}
+    approx, nbytes = Int8Compressor().roundtrip(x)
+    scale = float(np.max(np.abs(np.asarray(x["w"])))) / 127.0
+    err = np.max(np.abs(np.asarray(x["w"]) - np.asarray(approx["w"])))
+    assert err <= scale * 0.5 + 1e-6
+    assert nbytes == n + 4
+
+
+def test_error_feedback_accumulates_everything():
+    """Sum of EF-compressed updates converges to sum of true updates."""
+    rng = np.random.default_rng(0)
+    delta = {"w": jnp.asarray(rng.normal(size=200).astype(np.float32))}
+    ef = ErrorFeedback(TopKCompressor(0.2))
+    acc = np.zeros(200)
+    T = 30
+    for _ in range(T):
+        a, _ = ef.roundtrip(delta)
+        acc += np.asarray(a["w"])
+    target = np.asarray(delta["w"]) * T
+    rel = np.linalg.norm(acc - target) / np.linalg.norm(target)
+    assert rel < 0.2       # EF trails by at most a few rounds of residual
+
+
+def test_make_compressor_specs():
+    assert make_compressor(None) is None
+    assert make_compressor("none") is None
+    assert isinstance(make_compressor("topk:0.25"), TopKCompressor)
+    assert make_compressor("topk:0.25").ratio == 0.25
+    assert isinstance(make_compressor("int8"), Int8Compressor)
+    with pytest.raises(ValueError):
+        make_compressor("zstd")
+
+
+def test_compression_ratio_reporting():
+    x = {"w": jnp.zeros(1000, jnp.float32)}
+    _, topk_bytes = TopKCompressor(0.1).roundtrip(x)
+    _, int8_bytes = Int8Compressor().roundtrip(x)
+    dense = 4000
+    assert topk_bytes < dense
+    assert int8_bytes < dense

@@ -1,0 +1,90 @@
+"""Dry-run machinery at tiny scale: a subprocess with 8 fake host devices
+lowers+compiles smoke-size cells on single-pod AND multi-pod meshes (this is
+the same code path as the 512-device production dry-run) and an elastic
+(non-production) mesh shape, proving the sharding config is mesh-agnostic."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, jax
+from repro.configs import smoke_config, SHAPES, ShapeConfig
+from repro.launch.mesh import make_mesh
+from repro.launch.specs import build_cell, build_agg_cell
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.dryrun import collective_stats, memory_stats
+from repro.sharding import axis_rules
+
+results = {}
+shape = ShapeConfig("smoke_train", 64, 8, "train")
+dshape = ShapeConfig("smoke_decode", 64, 8, "decode")
+for mesh_name, mesh in [
+    ("single", make_mesh((2, 4), ("data", "model"))),
+    ("multi", make_mesh((2, 2, 2), ("pod", "data", "model"))),
+    ("elastic", make_mesh((4, 2), ("data", "model"))),
+]:
+    for arch in ["qwen3-32b", "mixtral-8x22b", "mamba2-1.3b",
+                 "recurrentgemma-2b", "whisper-tiny", "internvl2-1b"]:
+        cfg = smoke_config(arch)
+        with axis_rules(mesh):
+            cell = build_cell(cfg, shape, mesh)
+            compiled = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                               out_shardings=cell.out_shardings).lower(*cell.args).compile()
+            h = analyze_hlo(compiled.as_text())
+            m = memory_stats(compiled)
+            results[f"{mesh_name}:{arch}:train"] = dict(
+                flops=h["flops"], mem=m.get("total_bytes_per_device", 0))
+    # decode path for one arch per mesh
+    cfg = smoke_config("qwen3-32b")
+    with axis_rules(mesh):
+        cell = build_cell(cfg, dshape, mesh)
+        compiled = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                           out_shardings=cell.out_shardings).lower(*cell.args).compile()
+        results[f"{mesh_name}:qwen3:decode"] = dict(ok=True)
+    # SEAFL aggregation step (buffer shards over pod on the multi mesh)
+    cfg = smoke_config("minicpm-2b")
+    with axis_rules(mesh):
+        cell = build_agg_cell(cfg, mesh, k_slots=4)
+        compiled = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                           out_shardings=cell.out_shardings).lower(*cell.args).compile()
+        results[f"{mesh_name}:agg"] = dict(
+            coll=analyze_hlo(compiled.as_text())["coll_total_bytes"])
+print(json.dumps(results))
+"""
+
+
+@pytest.fixture(scope="module")
+def dryrun_results():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_all_meshes_compile(dryrun_results):
+    r = dryrun_results
+    for mesh in ("single", "multi", "elastic"):
+        for arch in ("qwen3-32b", "mixtral-8x22b", "mamba2-1.3b",
+                     "recurrentgemma-2b", "whisper-tiny", "internvl2-1b"):
+            key = f"{mesh}:{arch}:train"
+            assert key in r and r[key]["flops"] > 0, key
+
+
+def test_decode_compiles_on_all_meshes(dryrun_results):
+    for mesh in ("single", "multi", "elastic"):
+        assert dryrun_results[f"{mesh}:qwen3:decode"]["ok"]
+
+
+def test_agg_step_compiles_and_communicates(dryrun_results):
+    for mesh in ("single", "multi", "elastic"):
+        assert f"{mesh}:agg" in dryrun_results
+    # on the multi-pod mesh the pod-sharded buffer forces cross-pod traffic
+    assert dryrun_results["multi:agg"]["coll"] > 0

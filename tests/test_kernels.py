@@ -1,0 +1,195 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.seafl_agg import ops as agg_ops
+from repro.kernels.seafl_agg import ref as agg_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.rglru.ref import rglru_scan_ref
+from repro.kernels.ssd.ops import ssd_forward
+from repro.kernels.ssd.ref import ssd_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------- seafl_agg
+
+@pytest.mark.parametrize("K,P,block", [(2, 256, 128), (7, 5000, 1024),
+                                       (16, 4096, 512), (1, 100, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_similarity_partials(K, P, block, dtype):
+    d = jnp.asarray(RNG.normal(size=(K, P)), dtype)
+    g = jnp.asarray(RNG.normal(size=(P,)), dtype)
+    out = agg_ops.similarity_partials(d, g, block_p=block)
+    ref = agg_ref.similarity_partials_ref(d, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2 * P ** 0.5)
+
+
+@pytest.mark.parametrize("K,P,block", [(3, 512, 128), (10, 3000, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_weighted_aggregate(K, P, block, dtype):
+    w = jnp.asarray(RNG.dirichlet(np.ones(K)), jnp.float32)
+    s = jnp.asarray(RNG.normal(size=(K, P)), dtype)
+    g = jnp.asarray(RNG.normal(size=(P,)), dtype)
+    out = agg_ops.weighted_aggregate(w, s, g, 0.8, block_p=block)
+    ref = agg_ref.weighted_agg_ref(w, s, g, 0.8)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_fused_flat_aggregation_matches_ref():
+    K, P = 6, 2000
+    g = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
+    stacked = jnp.asarray(RNG.normal(size=(K, P)), jnp.float32)
+    deltas = jnp.asarray(RNG.normal(size=(K, P)), jnp.float32)
+    sizes = jnp.asarray(RNG.integers(1, 50, K), jnp.float32)
+    stale = jnp.asarray(RNG.integers(0, 10, K), jnp.float32)
+    out, p = agg_ops.seafl_aggregate_flat(g, stacked, deltas, sizes, stale,
+                                          3.0, 1.0, 10.0, 0.8, block_p=512)
+    ref, pr = agg_ref.seafl_aggregate_flat_ref(g, stacked, deltas, sizes,
+                                               stale, 3.0, 1.0, 10.0, 0.8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(pr), atol=1e-5)
+
+
+def test_fused_flat_matches_pytree_aggregation():
+    """Kernel path == core.aggregation pytree path on flattened params."""
+    from repro.core.aggregation import SeaflHyper, seafl_aggregate
+    from repro.utils import tree_stack, tree_flatten_concat
+    K, P = 4, 300
+    g = {"a": jnp.asarray(RNG.normal(size=(10, 10)), jnp.float32),
+         "b": jnp.asarray(RNG.normal(size=(200,)), jnp.float32)}
+    clients = [jax.tree.map(lambda x: x + 0.1 * (i + 1) *
+                            jnp.asarray(RNG.normal(size=x.shape), x.dtype), g)
+               for i in range(K)]
+    deltas = [jax.tree.map(lambda c, gg: c - gg, c, g) for c in clients]
+    sizes = jnp.asarray([10, 20, 30, 40], jnp.float32)
+    stale = jnp.asarray([0, 1, 2, 3], jnp.float32)
+    hyper = SeaflHyper()
+    tree_out, diag = seafl_aggregate(g, tree_stack(clients),
+                                     tree_stack(deltas), sizes, stale, hyper)
+    flat_out, p = agg_ops.seafl_aggregate_flat(
+        tree_flatten_concat(g),
+        jnp.stack([tree_flatten_concat(c) for c in clients]),
+        jnp.stack([tree_flatten_concat(d) for d in deltas]),
+        sizes, stale, hyper.alpha, hyper.mu, hyper.beta, hyper.theta,
+        block_p=128)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(diag["weights"]),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(flat_out),
+                               np.asarray(tree_flatten_concat(tree_out)),
+                               atol=1e-4)
+
+
+# -------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("B,Sq,Skv,H,KVH,D,causal,window", [
+    (2, 64, 64, 4, 4, 32, True, None),
+    (1, 128, 128, 8, 2, 64, True, None),
+    (2, 64, 64, 4, 1, 32, True, 16),      # MQA + sliding window
+    (1, 33, 65, 6, 3, 16, False, None),   # ragged, cross-attention-like
+    (1, 1, 64, 4, 2, 32, True, None),     # decode-like single query
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Sq, Skv, H, KVH, D, causal, window, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, Sq, H, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Skv, KVH, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Skv, KVH, D)), dtype)
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        block_q=32, block_k=32)
+    ref = attention_ref(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                        jnp.moveaxis(v, 2, 1), causal=causal, window=window)
+    ref = jnp.moveaxis(ref, 1, 2)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_flash_matches_model_attention_path():
+    """Kernel agrees with the chunked-XLA attention used by the models."""
+    from repro.models.layers import chunked_attention
+    B, S, H, KVH, D = 2, 96, 8, 2, 32
+    q = jnp.asarray(RNG.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, KVH, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, KVH, D)), jnp.float32)
+    o1 = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    o2 = chunked_attention(q, k, v, causal=True, q_chunk=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- rglru
+
+@pytest.mark.parametrize("B,S,C,bs,bc", [
+    (2, 64, 32, 16, 16), (1, 100, 48, 32, 16), (2, 37, 128, 8, 64),
+    (1, 256, 256, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_sweep(B, S, C, bs, bc, dtype):
+    a = jnp.asarray(RNG.uniform(0.7, 1.0, (B, S, C)), dtype)
+    b = jnp.asarray(0.1 * RNG.normal(size=(B, S, C)), dtype)
+    h0 = jnp.asarray(RNG.normal(size=(B, C)), jnp.float32)
+    h, hl = rglru_scan(a, b, h0, block_s=bs, block_c=bc)
+    hr, hlr = rglru_scan_ref(a, b, h0)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hlr), rtol=tol, atol=tol)
+
+
+def test_rglru_matches_block_scan():
+    """Kernel == models.blocks.rg_lru_scan (associative-scan XLA path)."""
+    from repro.models.blocks import rg_lru_scan
+    B, S, C = 2, 48, 32
+    log_a = jnp.asarray(-RNG.uniform(0.01, 1.0, (B, S, C)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(B, S, C)), jnp.float32)
+    h0 = jnp.asarray(RNG.normal(size=(B, C)), jnp.float32)
+    h_kernel, _ = rglru_scan(jnp.exp(log_a), b, h0, block_s=16, block_c=16)
+    h_xla = rg_lru_scan(log_a, b, h0)
+    np.testing.assert_allclose(np.asarray(h_kernel), np.asarray(h_xla),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------- ssd
+
+@pytest.mark.parametrize("B,NH,S,hd,ds,chunk", [
+    (1, 2, 32, 8, 16, 8), (2, 4, 100, 16, 8, 16), (1, 1, 64, 32, 32, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_ssd_sweep(B, NH, S, hd, ds, chunk, dtype):
+    x = jnp.asarray(RNG.normal(size=(B, NH, S, hd)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, NH, S)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.5, 2.0, NH), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, S, ds)), dtype)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, ds)), dtype)
+    y, st_ = ssd_forward(x, dt, a, Bm, Cm, chunk=chunk)
+    yr, sr = ssd_ref(x, dt, a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(sr), rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunked_xla_matches_ref():
+    """models.blocks.ssd_chunked (XLA path) == sequential SSM oracle."""
+    from repro.models.blocks import ssd_chunked
+    B, NH, S, hd, ds, chunk = 2, 4, 70, 8, 16, 16
+    x = jnp.asarray(RNG.normal(size=(B, S, NH, hd)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, S, NH)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.5, 2.0, NH), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, S, ds)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, ds)), jnp.float32)
+    y, st_ = ssd_chunked(x, dt, a, Bm, Cm, chunk)
+    yr, sr = ssd_ref(jnp.moveaxis(x, 1, 2), jnp.moveaxis(dt, 1, 2), a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(jnp.moveaxis(y, 1, 2)),
+                               np.asarray(yr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(sr),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step on CPU, asserting shapes and finiteness — plus
+decode-path consistency for a representative subset."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config, list_configs, get_config
+from repro.models import build_model
+from repro.launch.specs import make_train_step
+from repro.optim import sgd, TrainState
+
+ARCHS = list_configs()
+
+
+def _batch(cfg, rng, B=2, S=32):
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(rng, (B, cfg.enc_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            rng, (B, cfg.n_img_tokens, cfg.vision_embed_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = smoke_config(arch)
+    m = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = m.init(rng)
+    B, S = 2, 32
+    batch = _batch(cfg, rng, B, S)
+    logits, aux = m.apply(params, batch)
+    S_out = S + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, S_out, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    # padded vocab entries are masked to -inf-ish
+    if cfg.padded_vocab != cfg.vocab_size:
+        assert float(logits[..., -1].max()) < -1e29
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_no_nans(arch):
+    cfg = smoke_config(arch)
+    m = build_model(cfg)
+    rng = jax.random.PRNGKey(1)
+    params = m.init(rng)
+    step = make_train_step(m, lr=0.01)
+    state = sgd(0.01).init_state(params)
+    batch = _batch(cfg, rng)
+    state2, metrics = jax.jit(step)(state, batch)
+    assert int(state2.step) == 1
+    assert np.isfinite(float(metrics["loss"]))
+    for leaf in jax.tree.leaves(state2.params):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())
+    # params actually changed
+    diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), params, state2.params)
+    assert max(jax.tree.leaves(diffs)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_microbatched_matches_flops(arch):
+    """Gradient accumulation (M=2) yields finite loss and same param shapes."""
+    cfg = smoke_config(arch)
+    m = build_model(cfg)
+    rng = jax.random.PRNGKey(2)
+    params = m.init(rng)
+    step = make_train_step(m, lr=0.01, microbatches=2)
+    state = sgd(0.01).init_state(params)
+    batch = _batch(cfg, rng, B=4)
+    state2, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "mixtral-8x22b",
+                                  "recurrentgemma-2b", "mamba2-1.3b",
+                                  "deepseek-v2-lite-16b"])
+def test_decode_matches_forward(arch):
+    cfg = smoke_config(arch).replace(param_dtype="float32", dtype="float32",
+                                     capacity_factor=8.0)
+    m = build_model(cfg)
+    rng = jax.random.PRNGKey(3)
+    params = m.init(rng)
+    B, S = 2, 24
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    logits_full, _ = m.apply(params, batch)
+    Sp = S - 3
+    cache = m.init_cache(B, S, jnp.float32)
+    lp, cache = m.prefill(params, {**batch, "tokens": tokens[:, :Sp]}, cache)
+    errs = [float(jnp.max(jnp.abs(lp[:, -1] - logits_full[:, Sp - 1])))]
+    for t in range(Sp, S):
+        ld, cache = m.decode_step(params, tokens[:, t:t + 1], cache)
+        errs.append(float(jnp.max(jnp.abs(ld[:, 0] - logits_full[:, t]))))
+    assert max(errs) < 1e-3, errs
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_param_count_close_to_analytic(arch):
+    """abstract init (no allocation) roughly matches the analytic count."""
+    cfg = get_config(arch)
+    m = build_model(cfg)
+    pa = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pa))
+    analytic = cfg.param_count()
+    assert 0.5 < actual / analytic < 2.0, (actual, analytic)
+
+
+def test_paper_cnn_models():
+    from repro.models.cnn import MODELS
+    rng = jax.random.PRNGKey(0)
+    for name, imgshape in [("lenet5", (28, 28, 1)), ("resnet10", (32, 32, 3)),
+                           ("vgg9", (32, 32, 3)), ("lenet5_small", (8, 8, 1)),
+                           ("mlp", (8, 8, 1))]:
+        kw = {}
+        if name in ("lenet5",):
+            kw = dict(num_classes=10, in_channels=1, img=28)
+        elif name == "lenet5_small":
+            kw = dict(num_classes=10, in_channels=1, img=8)
+        elif name == "mlp":
+            kw = dict(num_classes=10, d_in=64)
+        model = MODELS[name](**kw)
+        p = model.init(rng)
+        x = jax.random.normal(rng, (2,) + imgshape)
+        logits = model.apply(p, x)
+        assert logits.shape == (2, 10)
+        loss, _ = model.loss(p, {"x": x, "y": jnp.array([1, 2])})
+        assert np.isfinite(float(loss))

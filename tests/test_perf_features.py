@@ -1,0 +1,119 @@
+"""Regression guards for the §Perf features (EXPERIMENTS.md).
+
+These protect the beyond-paper optimizations: the delta-free aggregation
+algebra must stay bit-compatible with the paper-faithful formulation, and
+the int8 KV cache must stay within serving tolerance of the exact cache.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (
+    SeaflHyper, seafl_aggregate, seafl_aggregate_from_params,
+)
+from repro.utils import tree_stack, tree_sub
+
+
+def test_delta_free_aggregation_matches_faithful():
+    """seafl_aggregate_from_params (cos via w_k.w_g / |w_k|^2 / |w_g|^2
+    algebra) == seafl_aggregate (explicit deltas) — same weights, same
+    global update."""
+    rng = np.random.default_rng(0)
+    g = {"a": jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32)),
+         "b": jnp.asarray(rng.normal(size=(100,)).astype(np.float32))}
+    clients = [jax.tree.map(
+        lambda x: x + 0.05 * (i + 1) * jnp.asarray(
+            rng.normal(size=x.shape), x.dtype), g) for i in range(5)]
+    sizes = np.array([10., 20., 30., 40., 50.], np.float32)
+    stal = np.array([0., 1., 2., 5., 9.], np.float32)
+    hyper = SeaflHyper()
+
+    stacked = tree_stack(clients)
+    deltas = tree_stack([tree_sub(c, g) for c in clients])
+    out_a, diag_a = seafl_aggregate(g, stacked, deltas, sizes, stal, hyper)
+    out_b, diag_b = seafl_aggregate_from_params(g, stacked, sizes, stal, hyper)
+
+    np.testing.assert_allclose(np.asarray(diag_a["cos"]),
+                               np.asarray(diag_b["cos"]), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(diag_a["weights"]),
+                               np.asarray(diag_b["weights"]), atol=1e-5)
+    for la, lb in zip(jax.tree.leaves(out_a), jax.tree.leaves(out_b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-4)
+
+
+def test_delta_free_handles_zero_delta():
+    """cos is degenerate when w_k == w_g; weights must stay finite."""
+    g = {"w": jnp.ones((50,), jnp.float32)}
+    clients = [g, jax.tree.map(lambda x: x * 1.01, g)]
+    out, diag = seafl_aggregate_from_params(
+        g, tree_stack(clients), np.array([1., 1.], np.float32),
+        np.array([0., 0.], np.float32), SeaflHyper())
+    assert np.isfinite(np.asarray(diag["weights"])).all()
+    assert np.isfinite(np.asarray(out["w"])).all()
+
+
+@pytest.mark.parametrize("arch", ["minicpm-2b", "qwen3-32b"])
+def test_int8_kv_cache_close_to_exact(arch):
+    from repro.configs import smoke_config
+    from repro.models import build_model
+    cfg0 = smoke_config(arch).replace(param_dtype="float32", dtype="float32")
+    cfg8 = cfg0.replace(kv_cache_dtype="int8")
+    rng = jax.random.PRNGKey(0)
+    m0, m8 = build_model(cfg0), build_model(cfg8)
+    params = m0.init(rng)
+    B, S = 2, 20
+    tokens = jax.random.randint(rng, (B, S), 0, cfg0.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    outs = {}
+    for tag, m in [("exact", m0), ("int8", m8)]:
+        cache = m.init_cache(B, S, jnp.float32)
+        lp, cache = m.prefill(params, {**batch, "tokens": tokens[:, :S - 4]},
+                              cache)
+        ls = [lp[:, -1]]
+        for t in range(S - 4, S):
+            ld, cache = m.decode_step(params, tokens[:, t:t + 1], cache)
+            ls.append(ld[:, 0])
+        outs[tag] = jnp.stack(ls)
+    # compare only real-vocab logits (padding masked to -1e30 in both)
+    V = cfg0.vocab_size
+    a, b = outs["exact"][..., :V], outs["int8"][..., :V]
+    err = float(jnp.max(jnp.abs(a - b)))
+    assert err < 0.05, err
+    agree = float(jnp.mean(
+        (jnp.argmax(a, -1) == jnp.argmax(b, -1)).astype(jnp.float32)))
+    assert agree == 1.0
+
+
+def test_int8_cache_is_half_size():
+    from repro.configs import smoke_config
+    from repro.models import build_model
+    cfg0 = smoke_config("qwen3-32b")
+    cfg8 = cfg0.replace(kv_cache_dtype="int8")
+    c0 = build_model(cfg0).init_cache(2, 128)
+    c8 = build_model(cfg8).init_cache(2, 128)
+    bytes0 = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c0))
+    bytes8 = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c8))
+    assert bytes8 < 0.66 * bytes0
+
+
+def test_microbatched_grads_match_full_batch():
+    """M-way gradient accumulation == single-batch gradients (SGD step)."""
+    from repro.configs import smoke_config
+    from repro.models import build_model
+    from repro.launch.specs import make_train_step
+    from repro.optim import sgd
+    cfg = smoke_config("phi4-mini-3.8b").replace(param_dtype="float32",
+                                                 dtype="float32")
+    m = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = m.init(rng)
+    tokens = jax.random.randint(rng, (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    s1, _ = make_train_step(m, 0.1, microbatches=1)(
+        sgd(0.1).init_state(params), batch)
+    s2, _ = make_train_step(m, 0.1, microbatches=2)(
+        sgd(0.1).init_state(params), batch)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)

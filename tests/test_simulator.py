@@ -1,0 +1,79 @@
+"""Event-driven simulator: determinism, SEAFL² notify semantics, failures."""
+import numpy as np
+import pytest
+
+from repro.core.server import FLConfig
+from repro.experiment import ExperimentConfig, build_experiment, run_experiment
+from repro.runtime.simulator import SimConfig
+
+
+def tiny_cfg(algorithm="seafl", **kw):
+    fl = FLConfig(algorithm=algorithm, n_clients=12, concurrency=6,
+                  buffer_size=3, staleness_limit=4, local_epochs=2,
+                  local_lr=0.05, batch_size=16, seed=3)
+    sim = SimConfig(speed_model="pareto", base_epoch_time=1.0, seed=3,
+                    **kw)
+    return ExperimentConfig(dataset="tiny", n_train=600, n_test=120,
+                            model="mlp", fl=fl, sim=sim, seed=3)
+
+
+def test_deterministic_replay():
+    _, h1 = run_experiment(tiny_cfg(), max_rounds=8)
+    _, h2 = run_experiment(tiny_cfg(), max_rounds=8)
+    assert len(h1) == len(h2)
+    for a, b in zip(h1, h2):
+        assert a["time"] == b["time"]
+        assert a["round"] == b["round"]
+        np.testing.assert_allclose(a.get("acc", 0), b.get("acc", 0))
+
+
+def test_seafl2_faster_wallclock_than_seafl():
+    """Partial training shortens waits for over-stale stragglers (paper
+    Fig. 6): for the same number of rounds, simulated wall-clock must not
+    increase, and typically shrinks."""
+    _, h1 = run_experiment(tiny_cfg("seafl"), max_rounds=12)
+    _, h2 = run_experiment(tiny_cfg("seafl2"), max_rounds=12)
+    t1 = h1[-1]["time"]
+    t2 = h2[-1]["time"]
+    assert t2 <= t1 * 1.05, (t1, t2)
+
+
+def test_fedavg_slower_than_semi_async():
+    _, hb = run_experiment(tiny_cfg("fedbuff"), max_rounds=8)
+    _, ha = run_experiment(tiny_cfg("fedavg"), max_rounds=8)
+    assert ha[-1]["time"] > hb[-1]["time"]
+
+
+def test_staleness_recorded_within_limit():
+    sim, hist = run_experiment(tiny_cfg("seafl"), max_rounds=15)
+    for h in hist:
+        assert h["staleness_max"] <= 4.0
+
+
+def test_failures_do_not_deadlock():
+    cfg = tiny_cfg("seafl2", fail_prob=0.2, recover_after=5.0)
+    sim, hist = run_experiment(cfg, max_rounds=10, max_time=2000)
+    assert len(hist) >= 3        # training progressed despite crashes
+    assert np.isfinite(hist[-1]["time"])
+
+
+def test_compression_in_simulation():
+    cfg = tiny_cfg("seafl")
+    cfg = ExperimentConfig(dataset="tiny", n_train=400, n_test=80, model="mlp",
+                           fl=FLConfig(algorithm="seafl", n_clients=8,
+                                       concurrency=4, buffer_size=2,
+                                       staleness_limit=4, local_epochs=2,
+                                       batch_size=16, compression="int8",
+                                       seed=0),
+                           sim=SimConfig(seed=0), seed=0)
+    sim, hist = run_experiment(cfg, max_rounds=6)
+    assert sim.server.bytes_uploaded > 0
+    assert len(hist) >= 1
+
+
+def test_target_accuracy_early_stop():
+    cfg = tiny_cfg("fedbuff")
+    sim, hist = run_experiment(cfg, max_rounds=100, target_acc=0.3)
+    accs = [h.get("acc", 0) for h in hist]
+    assert max(accs) >= 0.3
+    assert sim.time_to_accuracy(0.3) is not None
