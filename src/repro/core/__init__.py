@@ -5,11 +5,13 @@ from repro.core.aggregation import (
 )
 from repro.core.buffer import Update, UpdateBuffer
 from repro.core.client import Client, make_epoch_fn
+from repro.core.packer import ParamPacker
 from repro.core.server import FLConfig, SeaflServer, ALGORITHMS
 
 __all__ = [
     "SeaflHyper", "seafl_aggregate", "seafl_weights", "staleness_factor",
     "importance_factor", "update_similarities", "fedavg_aggregate",
     "fedbuff_aggregate", "fedasync_aggregate", "Update", "UpdateBuffer",
-    "Client", "make_epoch_fn", "FLConfig", "SeaflServer", "ALGORITHMS",
+    "ParamPacker", "Client", "make_epoch_fn", "FLConfig", "SeaflServer",
+    "ALGORITHMS",
 ]

@@ -4,8 +4,11 @@ All functions are pure JAX over arbitrary pytrees and work identically for a
 60k-param LeNet on one CPU and a 140B-param Mixtral sharded over 512 chips
 (the cosine terms are partial reductions + scalar psum; nothing is gathered).
 
-Weight rules for the paper's baselines (FedAvg / FedBuff / FedAsync) live
-here too so every algorithm shares one aggregation code path.
+This module is the *reference* pytree path: the server hot path runs on the
+fused flat-buffer engine in kernels/seafl_agg (same math over a packed
+(K, P) buffer, delta-free), and tests/test_flat_engine.py pins the two
+implementations together to <=1e-5.  Weight rules for the paper's baselines
+(FedAvg / FedBuff / FedAsync) live here too in pytree form.
 """
 from __future__ import annotations
 

@@ -1,28 +1,34 @@
 """K-slot update buffer (Algorithm 1 'Server stores received updates').
 
-Host-side metadata + lazily stacked device pytrees.  In cohort mode the
-stacked leaves carry a leading K axis that shards over the 'pod' mesh axis
-(updates stay resident where they were produced; aggregation is a weighted
-reduction over that axis — see sharding.DEFAULT_RULES['buffer']).
+Host-side metadata + one preallocated ``(K, P)`` f32 device buffer.  Incoming
+client params arrive as flat ``ParamPacker`` vectors and are written
+slot-by-slot with a donated dynamic-update (no per-aggregation ``tree_stack``,
+no stored delta pytrees — the Eq. (5) cosine terms are recovered delta-free by
+kernels/seafl_agg).  In cohort mode the leading K axis shards over the 'pod'
+mesh axis (updates stay resident where they were produced; aggregation is a
+weighted reduction over that axis — see sharding.DEFAULT_RULES['buffer']).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.utils import tree_stack
 
-PyTree = Any
+@partial(jax.jit, donate_argnums=(0,))
+def _write_slot(buf: jnp.ndarray, i: jnp.ndarray, flat: jnp.ndarray):
+    """In-place (donated) write of one (P,) vector into row i of (K, P)."""
+    return jax.lax.dynamic_update_index_in_dim(
+        buf, flat.astype(buf.dtype), i, axis=0)
 
 
 @dataclass
 class Update:
+    """Per-slot host metadata (the params live in the device buffer)."""
     client_id: int
-    params: PyTree            # w_t^k   (client model after local training)
-    delta: PyTree             # Delta_t^k = w_t^k - w_{t_k}^g
     n_samples: int
     version: int              # t_k — round at which the client got the model
     n_epochs: int             # epochs actually completed (< E under SEAFL²)
@@ -31,38 +37,60 @@ class Update:
 
 
 class UpdateBuffer:
-    def __init__(self, capacity: int):
+    """Fixed-capacity slot buffer: metadata list + (capacity, P) device array."""
+
+    def __init__(self, capacity: int, param_size: Optional[int] = None):
         self.capacity = int(capacity)
-        self._slots: list[Update] = []
+        self.param_size = param_size
+        self._meta: list[Update] = []
+        self._buf: Optional[jnp.ndarray] = None
+        if param_size is not None:
+            self._buf = jnp.zeros((self.capacity, int(param_size)),
+                                  jnp.float32)
 
     def __len__(self) -> int:
-        return len(self._slots)
+        return len(self._meta)
 
     @property
     def full(self) -> bool:
-        return len(self._slots) >= self.capacity
+        return len(self._meta) >= self.capacity
 
-    def add(self, u: Update) -> None:
-        self._slots.append(u)
+    def add(self, u: Update, flat_params: jnp.ndarray) -> None:
+        if self._buf is None:                 # lazy alloc from first update
+            self.param_size = int(flat_params.shape[0])
+            self._buf = jnp.zeros((self.capacity, self.param_size),
+                                  jnp.float32)
+        slot = len(self._meta)
+        if slot >= self._buf.shape[0]:
+            # SEAFL sync-wait can hold aggregation while updates keep landing
+            # (paper §IV-B): spill past K by doubling the slot array.
+            grow = jnp.zeros((self._buf.shape[0], self.param_size),
+                             jnp.float32)
+            self._buf = jnp.concatenate([self._buf, grow], axis=0)
+        self._buf = _write_slot(self._buf, jnp.int32(slot), flat_params)
+        self._meta.append(u)
 
     def updates(self) -> list[Update]:
-        return list(self._slots)
+        return list(self._meta)
 
     def staleness(self, current_round: int) -> jnp.ndarray:
-        return jnp.asarray([current_round - u.version for u in self._slots],
+        return jnp.asarray([current_round - u.version for u in self._meta],
                            jnp.float32)
 
     def data_sizes(self) -> jnp.ndarray:
-        return jnp.asarray([u.n_samples for u in self._slots], jnp.float32)
+        return jnp.asarray([u.n_samples for u in self._meta], jnp.float32)
 
-    def stacked(self) -> tuple[PyTree, PyTree]:
-        """(stacked client params, stacked deltas) with leading K axis."""
-        return (tree_stack([u.params for u in self._slots]),
-                tree_stack([u.delta for u in self._slots]))
+    def stacked_flat(self) -> jnp.ndarray:
+        """(k, P) view of the filled slots (k == capacity at trigger time)."""
+        if self._buf is None:
+            raise RuntimeError("UpdateBuffer is empty")
+        k = len(self._meta)
+        return self._buf if k == self._buf.shape[0] else self._buf[:k]
 
     def drain(self) -> list[Update]:
-        out, self._slots = self._slots, []
+        """Reset to empty; slot storage is reused (no realloc)."""
+        out, self._meta = self._meta, []
         return out
 
     def client_ids(self) -> list[int]:
-        return [u.client_id for u in self._slots]
+        return [u.client_id for u in self._meta]

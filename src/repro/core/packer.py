@@ -1,0 +1,77 @@
+"""Static pytree <-> flat (P,) buffer layout (the server's wire format).
+
+The FL server's hot path (kernels/seafl_agg) operates on flat f32 buffers so
+the whole K-slot update buffer is one contiguous (K, P) array: a single HBM
+stream for the Eq. (5) partial reductions and the Eq. (7)+(8) weighted mix,
+and later a single leading axis to shard over the 'pod' mesh axis
+(sharding.DEFAULT_RULES['buffer']).
+
+A :class:`ParamPacker` captures the leaf layout (treedef, shapes, dtypes,
+offsets) of a template pytree once at server construction; ``pack`` and
+``unpack`` are then jit'd, layout-static bijections.  Round-trips are exact
+for f32 and for any narrower float (bf16/f16 widen losslessly into the f32
+buffer).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class ParamPacker:
+    """pytree <-> flat (P,) f32 buffer with a static leaf layout."""
+
+    def __init__(self, template: PyTree):
+        leaves, treedef = jax.tree.flatten(template)
+        self._treedef = treedef
+        self._shapes = tuple(tuple(x.shape) for x in leaves)
+        self._dtypes = tuple(jnp.asarray(x).dtype for x in leaves)
+        sizes = [math.prod(s) for s in self._shapes]   # () -> 1, (0,) -> 0
+        offs, off = [], 0
+        for n in sizes:
+            offs.append(off)
+            off += n
+        self._sizes = tuple(sizes)
+        self._offsets = tuple(offs)
+        self.size = off                      # P
+        self._pack_jit = jax.jit(self._pack_impl)
+        self._unpack_jit = jax.jit(self._unpack_impl)
+
+    # ------------------------------------------------------------------ impl
+    def _pack_impl(self, tree: PyTree) -> jnp.ndarray:
+        leaves = jax.tree.leaves(tree)
+        shapes = tuple(tuple(jnp.shape(x)) for x in leaves)
+        if shapes != self._shapes:
+            raise ValueError(
+                f"ParamPacker: leaf shapes {shapes} != layout {self._shapes}")
+        if not leaves:
+            return jnp.zeros((0,), jnp.float32)
+        return jnp.concatenate(
+            [jnp.ravel(x).astype(jnp.float32) for x in leaves])
+
+    def _unpack_impl(self, flat: jnp.ndarray) -> PyTree:
+        out = []
+        for shape, dtype, off, n in zip(self._shapes, self._dtypes,
+                                        self._offsets, self._sizes):
+            out.append(flat[off:off + n].reshape(shape).astype(dtype))
+        return jax.tree.unflatten(self._treedef, out)
+
+    # ------------------------------------------------------------------- api
+    def pack(self, tree: PyTree) -> jnp.ndarray:
+        """Flatten ``tree`` into a (P,) f32 buffer (layout checked)."""
+        if jax.tree.structure(tree) != self._treedef:
+            raise ValueError("ParamPacker: pytree structure does not match "
+                             "the template this packer was built from")
+        return self._pack_jit(tree)
+
+    def unpack(self, flat: jnp.ndarray) -> PyTree:
+        """Rebuild the template-shaped pytree from a (P,) buffer."""
+        if flat.shape != (self.size,):
+            raise ValueError(
+                f"ParamPacker: expected shape ({self.size},), got {flat.shape}")
+        return self._unpack_jit(flat)

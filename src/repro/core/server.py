@@ -10,21 +10,27 @@ Policies (paper §VI comparison set):
   fedbuff  — buffer K, uniform-weight delta aggregation, no staleness limit
   seafl    — buffer K + staleness limit (sync-wait) + adaptive weights (Eqs 4-8)
   seafl2   — seafl + partial-training notifications (Algorithm 2)
+
+Hot path: every algorithm aggregates through the flat (K, P) buffer engine
+(kernels/seafl_agg) — incoming client params are packed once by ParamPacker
+into a preallocated device buffer slot, the Eq. (5) cosine terms are
+recovered delta-free (no delta pytrees are ever built or stored), and model
+versions live in ``_history`` as flat (P,) buffers, unpacked lazily only at
+dispatch / eval / checkpoint boundaries.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Any, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import (
-    SeaflHyper, seafl_aggregate, fedavg_aggregate, fedbuff_aggregate,
-    fedasync_aggregate,
-)
+from repro.core.aggregation import SeaflHyper
 from repro.core.buffer import Update, UpdateBuffer
+from repro.core.packer import ParamPacker
 from repro.runtime.compression import ErrorFeedback, make_compressor
-from repro.utils import tree_add, tree_sub
 
 PyTree = Any
 
@@ -71,19 +77,21 @@ class AggregationEvent:
 
 
 class SeaflServer:
-    """Holds global params, buffer, version history, client activity state."""
+    """Holds global params (flat), buffer, version history, client activity."""
 
     def __init__(self, cfg: FLConfig, params: PyTree,
                  client_sizes: dict[int, int]):
         assert cfg.algorithm in ALGORITHMS, cfg.algorithm
         self.cfg = cfg
-        self.params = params
+        self.packer = ParamPacker(params)
+        self._flat = self.packer.pack(params)          # current global, (P,)
         self.round = 0
-        self.buffer = UpdateBuffer(self._trigger_size())
+        self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size)
         self.client_sizes = client_sizes
         self.active: dict[int, int] = {}         # cid -> version t_k
         self.idle: set[int] = set(client_sizes)
-        self._history: dict[int, PyTree] = {0: params}
+        self._history: dict[int, jnp.ndarray] = {0: self._flat}  # flat buffers
+        self._unpack_cache: dict[int, PyTree] = {0: params}
         self._notified: set[int] = set()
         self._rng = np.random.default_rng(cfg.seed)
         self.total_aggregations = 0
@@ -99,8 +107,23 @@ class SeaflServer:
             return 1
         return self.cfg.buffer_size
 
-    def params_at(self, version: int) -> PyTree:
+    @property
+    def params(self) -> PyTree:
+        """Current global model as a pytree (dispatch/eval boundary)."""
+        return self.params_at(self.round)
+
+    @property
+    def global_flat(self) -> jnp.ndarray:
+        return self._flat
+
+    def flat_at(self, version: int) -> jnp.ndarray:
         return self._history[version]
+
+    def params_at(self, version: int) -> PyTree:
+        if version not in self._unpack_cache:
+            self._unpack_cache[version] = self.packer.unpack(
+                self._history[version])
+        return self._unpack_cache[version]
 
     def staleness_of(self, cid: int) -> int:
         return self.round - self.active[cid]
@@ -108,6 +131,8 @@ class SeaflServer:
     def _gc_history(self):
         live = set(self.active.values()) | {self.round}
         self._history = {v: p for v, p in self._history.items() if v in live}
+        self._unpack_cache = {v: p for v, p in self._unpack_cache.items()
+                              if v in live}
 
     def _sample_idle(self, k: int) -> list[int]:
         pool = sorted(self.idle)
@@ -119,8 +144,9 @@ class SeaflServer:
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> list[int]:
-        """Initial dispatch: sample M clients for round 0."""
-        cids = self._sample_idle(self.cfg.concurrency)
+        """Dispatch up to M in-flight clients (top-up, so calling it on a
+        resumed or restored server never over-subscribes the fleet)."""
+        cids = self._sample_idle(self.cfg.concurrency - len(self.active))
         for c in cids:
             self.mark_dispatched(c)
         return cids
@@ -170,20 +196,23 @@ class SeaflServer:
                   recv_time: float = 0.0) -> Optional[AggregationEvent]:
         version = self.active.pop(cid)
         self.idle.add(cid)
-        base = self.params_at(version)
-        delta = tree_sub(client_params, base)
+        flat = self.packer.pack(client_params)
         if self._compressor_spec:
-            # uplink ships the compressed delta; server reconstructs w_hat.
+            # uplink ships the compressed *per-leaf* delta vs the version the
+            # client trained from (topk/int8 quantise each layer separately);
+            # the pytree delta is transient — only w_hat = base + delta is
+            # written into the flat buffer.
+            base = self._history[version]
             if cid not in self._ef:
                 self._ef[cid] = ErrorFeedback(
                     make_compressor(self._compressor_spec))
-            delta, nbytes = self._ef[cid].roundtrip(delta)
+            delta, nbytes = self._ef[cid].roundtrip(
+                self.packer.unpack(flat - base))
             self.bytes_uploaded += nbytes
-            client_params = tree_add(base, delta)
+            flat = base + self.packer.pack(delta)
         self.buffer.add(Update(
-            client_id=cid, params=client_params, delta=delta,
-            n_samples=self.client_sizes[cid], version=version,
-            n_epochs=n_epochs, recv_time=recv_time))
+            client_id=cid, n_samples=self.client_sizes[cid], version=version,
+            n_epochs=n_epochs, recv_time=recv_time), flat)
 
         if len(self.buffer) >= self.buffer.capacity and not self._blocked_by_stale():
             return self._aggregate(recv_time)
@@ -191,38 +220,64 @@ class SeaflServer:
 
     # ----------------------------------------------------------- aggregate
     def _aggregate(self, now: float) -> AggregationEvent:
+        """One server aggregation, entirely on the flat (K, P) engine."""
+        # deferred import: kernels.seafl_agg.ops reuses the Eq. (4)/(6)
+        # weight rule from core.aggregation, so importing it at module scope
+        # from here (via the repro.core package) would be circular
+        from repro.kernels.seafl_agg.ops import (
+            seafl_aggregate_flat_from_params, fedavg_aggregate_flat,
+            fedbuff_aggregate_flat, fedasync_aggregate_flat,
+        )
         cfg = self.cfg
         updates = self.buffer.updates()
         staleness = np.asarray([self.round - u.version for u in updates],
                                np.float32)
         sizes = np.asarray([u.n_samples for u in updates], np.float32)
+        stacked = self.buffer.stacked_flat()
         weights = None
 
         if cfg.algorithm == "fedavg":
-            stacked, _ = self.buffer.stacked()
-            self.params = fedavg_aggregate(stacked, sizes)
-            weights = np.asarray(sizes / sizes.sum())
+            self._flat, w = fedavg_aggregate_flat(
+                self._flat, stacked, jnp.asarray(sizes))
+            weights = np.asarray(w)
         elif cfg.algorithm == "fedasync":
-            u = updates[0]
-            self.params = fedasync_aggregate(
-                self.params, u.params, staleness[0],
+            self._flat = fedasync_aggregate_flat(
+                self._flat, stacked[0], staleness[0],
                 cfg.fedasync_alpha0, cfg.fedasync_poly_a)
         elif cfg.algorithm == "fedbuff":
-            _, deltas = self.buffer.stacked()
-            self.params = fedbuff_aggregate(self.params, deltas,
-                                            cfg.fedbuff_eta_g)
-            weights = np.full(len(updates), 1.0 / len(updates))
-        else:  # seafl / seafl2 — Eqs. (4)-(8)
-            stacked, deltas = self.buffer.stacked()
-            self.params, diag = seafl_aggregate(
-                self.params, stacked, deltas, sizes, staleness, cfg.hyper())
-            weights = np.asarray(diag["weights"])
+            # fedbuff_aggregate_flat yields w_t + eta*mean(w_k - w_t); true
+            # FedBuff deltas are vs each client's dispatch version, so add
+            # eta*(w_t - mean_k base_k) — a tiny combination over the few
+            # distinct live versions, not another (K, P) buffer pass.
+            g, k = self._flat, float(len(updates))
+            mixed, w = fedbuff_aggregate_flat(g, stacked, cfg.fedbuff_eta_g)
+            counts: dict[int, int] = {}
+            for u in updates:
+                counts[u.version] = counts.get(u.version, 0) + 1
+            base_mix = sum((n / k) * self._history[v]
+                           for v, n in counts.items())
+            self._flat = mixed + cfg.fedbuff_eta_g * (g - base_mix)
+            weights = np.asarray(w)
+        else:  # seafl / seafl2 — Eqs. (4)-(8), delta-free
+            # Eq. (5) importance is measured against the *current* global
+            # (the seafl_aggregate_from_params identity): cos(w_k - w_t^g,
+            # w_t^g), not the dispatch-version base.  This is the delta-free
+            # trade the engine is built on — the similarity question becomes
+            # "does this update still point somewhere useful from where the
+            # model is now", and the buffer never has to store deltas.
+            h = cfg.hyper()
+            self._flat, w = seafl_aggregate_flat_from_params(
+                self._flat, stacked, jnp.asarray(sizes),
+                jnp.asarray(staleness), h.alpha, h.mu, h.beta, h.theta,
+                use_importance=h.use_importance,
+                use_staleness=h.use_staleness)
+            weights = np.asarray(w)
 
         contributors = self.buffer.client_ids()
         self.buffer.drain()
         self.round += 1
         self.total_aggregations += 1
-        self._history[self.round] = self.params
+        self._history[self.round] = self._flat
         self._gc_history()
 
         # contributors + top-up to M go back to training on the new model
@@ -253,11 +308,19 @@ class SeaflServer:
             "bytes_uploaded": int(self.bytes_uploaded),
             "rng": self._rng.bit_generator.state,
             "history_versions": sorted(self._history),
+            "ef_clients": sorted(c for c, ef in self._ef.items()
+                                 if ef._residual is not None),
         }
 
     def checkpoint_trees(self) -> dict:
-        """Pytrees that must be persisted: params at each live version."""
-        return {f"v{v}": p for v, p in self._history.items()}
+        """Arrays that must be persisted: the flat model at each live
+        version, plus per-client error-feedback residuals (without them a
+        restart under compression=topk:* silently resets error memory)."""
+        trees = {f"v{v}": p for v, p in self._history.items()}
+        for cid, ef in self._ef.items():
+            if ef._residual is not None:
+                trees[f"ef{cid}"] = ef._residual
+        return trees
 
     def load_state(self, state: dict, trees: dict):
         self.round = int(state["round"])
@@ -268,6 +331,14 @@ class SeaflServer:
         self.bytes_uploaded = int(state.get("bytes_uploaded", 0))
         self._rng = np.random.default_rng()
         self._rng.bit_generator.state = state["rng"]
-        self._history = {int(k[1:]): v for k, v in trees.items()}
-        self.params = self._history[self.round]
-        self.buffer = UpdateBuffer(self._trigger_size())
+        self._history = {int(k[1:]): jnp.asarray(v)
+                         for k, v in trees.items() if k.startswith("v")}
+        self._flat = self._history[self.round]
+        self._unpack_cache = {}
+        self._ef = {}
+        for k, v in trees.items():
+            if k.startswith("ef"):
+                ef = ErrorFeedback(make_compressor(self._compressor_spec))
+                ef._residual = jax.tree.map(jnp.asarray, v)
+                self._ef[int(k[2:])] = ef
+        self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size)

@@ -64,6 +64,53 @@ def similarity_partials_call(deltas, global_flat, block_p=2048,
     )(deltas, global_flat[None, :])
 
 
+def _sim_from_params_kernel(w_ref, g_ref, out_ref):
+    """Delta-free Eq. (5) partials.  Grid (nP,).  w:(K,BP) g:(1,BP) out:(K,4).
+
+    Delta_k = w_k - w_g is formed blockwise in VMEM and never materialised in
+    HBM: the (K, P) buffer stores client params only, so the aggregation's
+    buffer-resident bytes (and the bytes streamed to build a delta buffer)
+    are halved versus the explicit-delta path.  The partial sums accumulate
+    exactly across blocks because every term is a sum over the P axis.
+    """
+    i = pl.program_id(0)
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[0].astype(jnp.float32)
+    d = w - g[None, :]
+    dot = d @ g                                # (K,)  Delta_k . w_g
+    dsq = jnp.sum(d * d, axis=1)               # (K,)  ||Delta_k||^2
+    gsq = jnp.broadcast_to(jnp.sum(g * g), dot.shape)
+    part = jnp.stack([dot, dsq, gsq, jnp.zeros_like(dot)], axis=1)  # (K,4)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[...] += part
+
+
+def similarity_partials_from_params_call(params, global_flat, block_p=2048,
+                                         interpret=True):
+    """params: (K, P) client weights; global_flat: (P,); P % block_p == 0.
+    Returns (K, 4) f32 delta partials [dot, |d|^2, |g|^2] with no delta
+    buffer in HBM (zero-padding is exact: d = 0 - 0 in padded lanes)."""
+    K, P = params.shape
+    grid = (P // block_p,)
+    return pl.pallas_call(
+        _sim_from_params_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, block_p), lambda i: (0, i)),
+            pl.BlockSpec((1, block_p), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((K, 4), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, 4), jnp.float32),
+        interpret=interpret,
+    )(params, global_flat[None, :])
+
+
 def _agg_kernel(w_ref, theta_ref, p_ref, g_ref, out_ref):
     """Grid (nP,).  w:(1,K) theta:(1,1) p:(K,BP) g:(1,BP) out:(1,BP)."""
     w = w_ref[0].astype(jnp.float32)           # (K,)

@@ -1,4 +1,12 @@
-"""jit'd public wrappers: padding, weight math, end-to-end fused aggregation."""
+"""jit'd public wrappers: padding, weight math, end-to-end fused aggregation.
+
+This module is the single flat-buffer aggregation engine behind every server
+algorithm (seafl / seafl2 / fedbuff / fedavg / fedasync): SEAFL's Eq. (4)-(8)
+adaptive rule plus the baselines' weight rules, all expressed as one fused
+``weighted_aggregate`` HBM pass over the (K, P) buffer.  The delta-free
+entry point (``seafl_aggregate_flat_from_params``) recovers the Eq. (5)
+cosine terms directly from client params, so no delta buffer ever exists.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -6,9 +14,13 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.aggregation import (
+    SeaflHyper, cosine_from_partials, seafl_weights,
+)
 from repro.kernels import INTERPRET
 from repro.kernels.seafl_agg.kernel import (
-    similarity_partials_call, weighted_agg_call,
+    similarity_partials_call, similarity_partials_from_params_call,
+    weighted_agg_call,
 )
 
 
@@ -31,6 +43,16 @@ def similarity_partials(deltas, global_flat, block_p=2048, interpret=INTERPRET):
 
 
 @partial(jax.jit, static_argnames=("block_p", "interpret"))
+def similarity_partials_from_params(stacked, global_flat, block_p=2048,
+                                    interpret=INTERPRET):
+    """Delta-free Eq. (5) partials from client params (K, P) directly."""
+    s = _pad_to(stacked, block_p, axis=1)
+    g = _pad_to(global_flat, block_p, axis=0)
+    return similarity_partials_from_params_call(s, g, block_p=block_p,
+                                                interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_p", "interpret"))
 def weighted_aggregate(weights, stacked, global_flat, theta,
                        block_p=2048, interpret=INTERPRET):
     P = global_flat.shape[0]
@@ -41,24 +63,102 @@ def weighted_aggregate(weights, stacked, global_flat, theta,
     return out[:P]
 
 
-@partial(jax.jit, static_argnames=("block_p", "interpret"))
+def _seafl_weights_flat(cos, data_sizes, staleness, alpha, mu, beta,
+                        use_importance=True, use_staleness=True):
+    """Eq. (4)+(6) via the single weight-rule implementation in
+    core.aggregation (the hyper scalars may be tracers; SeaflHyper is just
+    the container seafl_weights expects)."""
+    hyper = SeaflHyper(alpha=alpha, mu=mu, beta=beta,
+                       use_importance=use_importance,
+                       use_staleness=use_staleness)
+    return seafl_weights(data_sizes, staleness, cos, hyper)
+
+
+@partial(jax.jit, static_argnames=("use_importance", "use_staleness",
+                                   "block_p", "interpret"))
 def seafl_aggregate_flat(global_flat, stacked_params, stacked_deltas,
                          data_sizes, staleness, alpha, mu, beta, theta,
+                         use_importance=True, use_staleness=True,
                          block_p=2048, interpret=INTERPRET):
-    """Fully fused flat-buffer SEAFL aggregation (Eqs. 4-8).
+    """Fully fused flat-buffer SEAFL aggregation (Eqs. 4-8), explicit deltas.
 
     Two HBM passes total: one over the deltas (partials), one over the
     params (weighted mix).  Returns (new_global (P,), weights (K,)).
     """
     part = similarity_partials(stacked_deltas, global_flat,
                                block_p=block_p, interpret=interpret)
-    cos = part[:, 0] * jax.lax.rsqrt(part[:, 1] * part[:, 2] + 1e-12)
-    gamma = alpha * beta / (staleness.astype(jnp.float32) + beta)
-    s = mu * (jnp.clip(cos, -1.0, 1.0) + 1.0) / 2.0
-    n = data_sizes.astype(jnp.float32)
-    n = n / jnp.maximum(jnp.sum(n), 1.0)
-    p = n * (gamma + s)
-    p = p / jnp.maximum(jnp.sum(p), 1e-12)
+    cos = cosine_from_partials(part[:, 0], part[:, 1], part[:, 2])
+    p = _seafl_weights_flat(cos, data_sizes, staleness, alpha, mu, beta,
+                            use_importance, use_staleness)
     new_global = weighted_aggregate(p, stacked_params, global_flat, theta,
                                     block_p=block_p, interpret=interpret)
     return new_global, p
+
+
+@partial(jax.jit, static_argnames=("use_importance", "use_staleness",
+                                   "block_p", "interpret"))
+def seafl_aggregate_flat_from_params(global_flat, stacked_params,
+                                     data_sizes, staleness,
+                                     alpha, mu, beta, theta,
+                                     use_importance=True, use_staleness=True,
+                                     block_p=2048, interpret=INTERPRET):
+    """Delta-free fused SEAFL aggregation: the server hot path.
+
+    The (K, P) buffer holds client params only; Delta_k = w_k - w_g is formed
+    blockwise in VMEM for the Eq. (5) partials.  Two HBM passes over one
+    buffer (vs. two passes over params + deltas plus the pass that *built*
+    the delta buffer), so buffer-read bytes roughly halve end to end.
+    Returns (new_global (P,), weights (K,)).
+    """
+    part = similarity_partials_from_params(stacked_params, global_flat,
+                                           block_p=block_p,
+                                           interpret=interpret)
+    cos = cosine_from_partials(part[:, 0], part[:, 1], part[:, 2])
+    p = _seafl_weights_flat(cos, data_sizes, staleness, alpha, mu, beta,
+                            use_importance, use_staleness)
+    new_global = weighted_aggregate(p, stacked_params, global_flat, theta,
+                                    block_p=block_p, interpret=interpret)
+    return new_global, p
+
+
+# ---------------------------------------------------------------------------
+# Baseline weight rules on the same engine (paper §VI comparison set).
+# Every algorithm is one fused (1-theta)*g + theta*(w @ buffer) pass.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("block_p", "interpret"))
+def fedavg_aggregate_flat(global_flat, stacked_params, data_sizes,
+                          block_p=2048, interpret=INTERPRET):
+    """FedAvg: w_{t+1} = sum_k (n_k/n) w_k  (theta = 1 drops the old global)."""
+    n = data_sizes.astype(jnp.float32)
+    w = n / jnp.maximum(jnp.sum(n), 1.0)
+    new_global = weighted_aggregate(w, stacked_params, global_flat,
+                                    jnp.float32(1.0), block_p=block_p,
+                                    interpret=interpret)
+    return new_global, w
+
+
+@partial(jax.jit, static_argnames=("block_p", "interpret"))
+def fedbuff_aggregate_flat(global_flat, stacked_params, eta_g,
+                           block_p=2048, interpret=INTERPRET):
+    """FedBuff, delta-free: w_t + eta_g mean_k(w_k - w_t)
+    == (1 - eta_g) w_t + eta_g mean_k w_k  (uniform weights)."""
+    K = stacked_params.shape[0]
+    w = jnp.full((K,), 1.0 / K, jnp.float32)
+    new_global = weighted_aggregate(w, stacked_params, global_flat,
+                                    jnp.asarray(eta_g, jnp.float32),
+                                    block_p=block_p, interpret=interpret)
+    return new_global, w
+
+
+@partial(jax.jit, static_argnames=("block_p", "interpret"))
+def fedasync_aggregate_flat(global_flat, client_flat, staleness,
+                            alpha0=0.6, a=0.5, block_p=2048,
+                            interpret=INTERPRET):
+    """FedAsync: immediate K=1 mixing at the poly-discounted rate
+    alpha_t = alpha0 (1+s)^-a (theta = alpha_t on the same fused pass)."""
+    alpha = (jnp.asarray(alpha0, jnp.float32)
+             * (1.0 + jnp.asarray(staleness, jnp.float32)) ** (-a))
+    return weighted_aggregate(jnp.ones((1,), jnp.float32), client_flat[None],
+                              global_flat, alpha, block_p=block_p,
+                              interpret=interpret)

@@ -13,6 +13,13 @@ def similarity_partials_ref(deltas, global_flat):
     return jnp.stack([dot, dsq, gsq, jnp.zeros_like(dot)], axis=1)
 
 
+def similarity_partials_from_params_ref(stacked, global_flat):
+    """Delta-free oracle: partials of Delta_k = w_k - w_g from params."""
+    w = stacked.astype(jnp.float32)
+    g = global_flat.astype(jnp.float32)
+    return similarity_partials_ref(w - g[None, :], g)
+
+
 def weighted_agg_ref(weights, stacked, global_flat, theta):
     w = weights.astype(jnp.float32)
     p = stacked.astype(jnp.float32)
@@ -30,3 +37,11 @@ def seafl_aggregate_flat_ref(global_flat, stacked, deltas, data_sizes,
     p = n * (gamma + s)
     p = p / jnp.maximum(jnp.sum(p), 1e-12)
     return weighted_agg_ref(p, stacked, global_flat, theta), p
+
+
+def seafl_aggregate_flat_from_params_ref(global_flat, stacked, data_sizes,
+                                         staleness, alpha, mu, beta, theta):
+    """Delta-free end-to-end oracle (deltas reconstructed explicitly)."""
+    deltas = stacked.astype(jnp.float32) - global_flat.astype(jnp.float32)
+    return seafl_aggregate_flat_ref(global_flat, stacked, deltas, data_sizes,
+                                    staleness, alpha, mu, beta, theta)

@@ -122,11 +122,20 @@ def _analyze_comp(lines: list[str], shapes: dict[str, str]) -> CompCost:
             out_prod = 1
             for d in out_dims:
                 out_prod *= d
-            mo = re.search(r"dot\(%([\w.\-]+),", s)
             mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", s)
+            # lhs shape: HLO inlines operand shapes — `dot(f32[64,32]{1,0}
+            # %lhs, ...)` — so read it straight from the call; fall back to
+            # the cross-computation shapes map for name-only operand syntax.
+            lhs_dims = None
+            mo = re.search(r"dot\(\s*([a-z0-9]+\[[0-9,]*\])", s)
+            if mo:
+                lhs_dims = _first_shape_dims(mo.group(1))
+            else:
+                mo = re.search(r"dot\(%([\w.\-]+),", s)
+                if mo and mo.group(1) in shapes:
+                    lhs_dims = _first_shape_dims(shapes[mo.group(1)])
             contract = 1
-            if mo and mc and mo.group(1) in shapes:
-                lhs_dims = _first_shape_dims(shapes[mo.group(1)]) or []
+            if mc and lhs_dims:
                 for ci in mc.group(1).split(","):
                     if ci and int(ci) < len(lhs_dims):
                         contract *= lhs_dims[int(ci)]
@@ -156,8 +165,12 @@ def _analyze_comp(lines: list[str], shapes: dict[str, str]) -> CompCost:
         elif op == "while":
             mb = re.search(r"body=%([\w.\-]+)", s)
             mc2 = re.search(r"condition=%([\w.\-]+)", s)
+            # XLA annotates resolved loops with an authoritative trip count:
+            # backend_config={"known_trip_count":{"n":"4"}}
+            mt = re.search(r'known_trip_count[^0-9]*(\d+)', s)
             if mb and mc2:
-                c.calls.append(("while", (mb.group(1), mc2.group(1))))
+                c.calls.append(("while", (mb.group(1), mc2.group(1),
+                                          int(mt.group(1)) if mt else None)))
         elif op == "conditional":
             for mf in re.finditer(r"(?:branch_computations=\{([^}]*)\}|true_computation=%([\w.\-]+)|false_computation=%([\w.\-]+))", s):
                 for g in mf.groups():
@@ -165,7 +178,10 @@ def _analyze_comp(lines: list[str], shapes: dict[str, str]) -> CompCost:
                         for nm in g.replace("%", "").split(","):
                             c.calls.append(("cond", nm.strip()))
         if op == "compare":
-            mc3 = re.search(r"compare\(%[\w.\-]+,\s*%([\w.\-]+)\)", s)
+            # operands carry inline shapes: compare(s32[] %iv, s32[] %const)
+            mc3 = re.search(
+                r"compare\((?:[a-z0-9]+\[[^\]]*\]\S*\s+)?%[\w.\-]+,"
+                r"\s*(?:[a-z0-9]+\[[^\]]*\]\S*\s+)?%([\w.\-]+)\)", s)
             if mc3:
                 const_name = mc3.group(1)
                 c.calls.append(("compare_ref", const_name))
@@ -239,9 +255,9 @@ def analyze_hlo(hlo: str) -> dict:
                 sub = total(payload, inside_fusion)
                 mult = 1
             elif kind == "while":
-                body, cond = payload
+                body, cond, known = payload
                 sub = total(body, inside_fusion)
-                mult = trip_count(cond)
+                mult = known if known is not None else trip_count(cond)
             else:
                 continue
             out["flops"] += mult * sub["flops"]

@@ -149,6 +149,8 @@ def main():
             last_ck = server.round
         if not sim._heap:
             break
+    if ck is not None:
+        ck.wait()   # the last async save must land before the process exits
     print(f"[train] done: {server.round} rounds, "
           f"{server.total_aggregations} aggregations, "
           f"uplink_bytes={server.bytes_uploaded}")

@@ -9,6 +9,12 @@ Simulated seconds are the wall-clock metric of every paper-figure benchmark;
 learning itself is real (lazy local SGD at upload time), so time-to-accuracy
 curves are true learning curves under simulated cluster timing.
 
+The server keeps model versions as flat (P,) buffers; this driver touches
+pytrees only at the dispatch boundary (``server.params_at`` unpacks lazily,
+cached per live version, so repeated uploads against one version pay the
+unpack once) and hands client results straight back to ``on_update``, which
+packs them into the (K, P) aggregation buffer.
+
 On a real TPU fleet the same SeaflServer object is driven by the cohort
 scheduler in repro/launch/train.py instead of this simulator.
 """
@@ -167,13 +173,25 @@ class FLSimulation:
             target_acc: Optional[float] = None) -> list[dict]:
         for cid in self.server.start():
             self._dispatch(cid)
+        # a restored server may list clients as in-flight whose training died
+        # with the previous process: nothing in this simulator will ever
+        # upload for them (and with no idle clients the run would end
+        # immediately), so re-dispatch them on the current global.
+        for cid in sorted(self.server.active):
+            if cid not in self._inflight:
+                self.server.mark_dispatched(cid)
+                self._dispatch(cid)
         while self._heap:
+            # peek before popping: breaking must leave the next event queued
+            # so a later run() call (checkpoint-chunked driving) resumes it
+            # instead of silently dropping one client's upload.
+            if (self._heap[0].time > max_time
+                    or self.server.round >= max_rounds):
+                break
             ev = heapq.heappop(self._heap)
             if not ev.valid:
                 continue
             self.now = ev.time
-            if self.now > max_time or self.server.round >= max_rounds:
-                break
             if ev.kind == "upload":
                 self._handle_upload(ev.data["cid"])
             elif ev.kind == "notify":

@@ -1,0 +1,139 @@
+"""Offline fallback shim for the `hypothesis` property-testing library.
+
+The container has no network, so `hypothesis` may not be installable.  This
+module registers a minimal, deterministic stand-in under
+``sys.modules['hypothesis']`` providing the subset this suite uses
+(`given`, `settings`, `strategies.floats/integers/lists/data`).  Each
+`@given` test runs against a fixed number of examples drawn from a PRNG
+seeded by the test's qualified name, so runs are reproducible everywhere.
+
+conftest.py imports this module only when the real hypothesis is missing;
+with hypothesis installed the shim is inert.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+_MAX_EXAMPLES_DEFAULT = 20
+
+
+class SearchStrategy:
+    """A sampler: draw one example from the given PRNG."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    lo, hi = float(min_value), float(max_value)
+
+    def sample(rng):
+        # hit the boundary values occasionally — they are where property
+        # tests actually bite (staleness 0, cos = ±1, ...)
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return float(rng.uniform(lo, hi))
+
+    return SearchStrategy(sample)
+
+
+def integers(min_value=0, max_value=100, **_kw):
+    lo, hi = int(min_value), int(max_value)
+
+    def sample(rng):
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return int(rng.integers(lo, hi + 1))
+
+    return SearchStrategy(sample)
+
+
+def lists(elements: SearchStrategy, min_size=0, max_size=10, **_kw):
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+
+    return SearchStrategy(sample)
+
+
+class DataObject:
+    """Interactive draws inside a test body (st.data())."""
+
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: SearchStrategy, label=None):
+        return strategy.example(self._rng)
+
+
+def data():
+    return SearchStrategy(lambda rng: DataObject(rng))
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = (getattr(wrapper, "_hyp_max_examples", None)
+                 or getattr(fn, "_hyp_max_examples", None)
+                 or _MAX_EXAMPLES_DEFAULT)
+            seed = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                drawn = [s.example(rng) for s in arg_strategies]
+                kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kw, **kwargs)
+
+        # mimic real hypothesis: plugins (e.g. anyio) unwrap via
+        # `obj.hypothesis.inner_test`
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # pytest must not mistake the drawn arguments for fixtures: hide the
+        # inner signature (functools.wraps exposes it via __wrapped__)
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorator
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    def decorator(fn):
+        if max_examples is not None:
+            fn._hyp_max_examples = int(max_examples)
+        return fn
+
+    return decorator
+
+
+def install():
+    """Register the shim as `hypothesis` / `hypothesis.strategies`."""
+    mod = types.ModuleType("hypothesis")
+    mod.__doc__ = __doc__
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("floats", "integers", "lists", "data"):
+        setattr(st, name, globals()[name])
+    st.SearchStrategy = SearchStrategy
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    mod.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+    return mod

@@ -9,6 +9,9 @@ import sys
 
 import pytest
 
+# the subprocess compile sweep takes ~3 min: tier-1 runs it only on --runslow
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 SCRIPT = r"""

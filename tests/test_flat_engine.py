@@ -1,0 +1,380 @@
+"""Flat-buffer aggregation engine: packer round-trips, flat-vs-pytree parity,
+delta-free vs explicit-delta identity, and server-level engine invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (
+    SeaflHyper, seafl_aggregate, seafl_aggregate_from_params,
+    fedavg_aggregate, fedbuff_aggregate, fedasync_aggregate,
+)
+from repro.core.packer import ParamPacker
+from repro.core.server import FLConfig, SeaflServer
+from repro.kernels.seafl_agg import ops as agg_ops
+from repro.utils import tree_stack, tree_sub, tree_flatten_concat
+
+RNG = np.random.default_rng(7)
+
+
+def random_tree(rng, spec):
+    """spec: dict name -> shape; builds a two-level nested f32 pytree."""
+    return {
+        "layer0": {k: jnp.asarray(rng.normal(size=s).astype(np.float32))
+                   for k, s in spec.items()},
+        "head": {"w": jnp.asarray(rng.normal(size=(11,)).astype(np.float32))},
+    }
+
+
+# ------------------------------------------------------------- ParamPacker
+
+def test_packer_roundtrip_exact():
+    tree = {"a": jnp.asarray(RNG.normal(size=(5, 3)).astype(np.float32)),
+            "b": {"c": jnp.asarray(RNG.normal(size=(7,)).astype(np.float32)),
+                  "d": jnp.asarray(RNG.normal(size=()).astype(np.float32))},
+            "e": jnp.asarray(RNG.normal(size=(2, 2, 2)), jnp.bfloat16)}
+    pk = ParamPacker(tree)
+    assert pk.size == 15 + 7 + 1 + 8
+    flat = pk.pack(tree)
+    assert flat.shape == (pk.size,) and flat.dtype == jnp.float32
+    out = pk.unpack(flat)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_packer_zero_sized_leaf():
+    tree = {"a": jnp.ones((3,)), "empty": jnp.zeros((0, 4)),
+            "b": jnp.ones((2,))}
+    pk = ParamPacker(tree)
+    assert pk.size == 5
+    out = pk.unpack(pk.pack(tree))
+    assert out["empty"].shape == (0, 4)
+    np.testing.assert_array_equal(np.asarray(out["b"]), np.ones(2))
+
+
+def test_packer_rejects_wrong_structure_and_size():
+    pk = ParamPacker({"a": jnp.zeros((3,))})
+    with pytest.raises(ValueError):
+        pk.pack({"b": jnp.zeros((3,))})
+    with pytest.raises(ValueError):
+        pk.unpack(jnp.zeros((4,)))
+
+
+# --------------------------------------------- flat engine vs pytree path
+
+@pytest.mark.parametrize("K,shapes", [
+    (3, {"w": (16, 8), "b": (8,)}),                  # P = 147 (non-multiple)
+    (10, {"w": (64, 32), "b": (32,), "s": (3, 3, 7)}),
+    (1, {"w": (5,)}),
+])
+def test_flat_engine_matches_pytree_seafl(K, shapes):
+    rng = np.random.default_rng(K)
+    g = random_tree(rng, shapes)
+    clients = [jax.tree.map(
+        lambda x: x + 0.1 * jnp.asarray(rng.normal(size=x.shape), x.dtype), g)
+        for _ in range(K)]
+    deltas = [tree_sub(c, g) for c in clients]
+    sizes = jnp.asarray(rng.integers(1, 100, K), jnp.float32)
+    stale = jnp.asarray(rng.integers(0, 8, K), jnp.float32)
+    hyper = SeaflHyper()
+
+    tree_out, diag = seafl_aggregate(g, tree_stack(clients),
+                                     tree_stack(deltas), sizes, stale, hyper)
+
+    pk = ParamPacker(g)
+    g_flat = pk.pack(g)
+    stacked = jnp.stack([pk.pack(c) for c in clients])
+    assert pk.size % 2048 != 0      # exercises the padding path
+
+    # explicit-delta flat kernel
+    d_flat = jnp.stack([pk.pack(d) for d in deltas])
+    out_d, p_d = agg_ops.seafl_aggregate_flat(
+        g_flat, stacked, d_flat, sizes, stale,
+        hyper.alpha, hyper.mu, hyper.beta, hyper.theta)
+    # delta-free flat kernel (the server hot path)
+    out_df, p_df = agg_ops.seafl_aggregate_flat_from_params(
+        g_flat, stacked, sizes, stale,
+        hyper.alpha, hyper.mu, hyper.beta, hyper.theta)
+
+    ref_flat = pk.pack(tree_out)
+    for out, p in ((out_d, p_d), (out_df, p_df)):
+        np.testing.assert_allclose(np.asarray(p), np.asarray(diag["weights"]),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_flat),
+                                   atol=1e-5)
+
+
+def test_delta_free_cosine_matches_explicit():
+    """The Eq. (5) identity: cos from (w.g, |w|^2, |g|^2) == cos(w - g, g)."""
+    K, shapes = 6, {"w": (40, 9), "b": (13,)}
+    rng = np.random.default_rng(0)
+    g = random_tree(rng, shapes)
+    clients = [jax.tree.map(
+        lambda x: x + 0.5 * jnp.asarray(rng.normal(size=x.shape), x.dtype), g)
+        for _ in range(K)]
+    sizes = jnp.full((K,), 10.0)
+    stale = jnp.zeros((K,))
+    hyper = SeaflHyper()
+    deltas = [tree_sub(c, g) for c in clients]
+    _, d_exp = seafl_aggregate(g, tree_stack(clients), tree_stack(deltas),
+                               sizes, stale, hyper)
+    _, d_df = seafl_aggregate_from_params(g, tree_stack(clients),
+                                          sizes, stale, hyper)
+    np.testing.assert_allclose(np.asarray(d_df["cos"]),
+                               np.asarray(d_exp["cos"]), atol=1e-5)
+    # and the fused kernel's partials agree with both
+    pk = ParamPacker(g)
+    part = agg_ops.similarity_partials_from_params(
+        jnp.stack([pk.pack(c) for c in clients]), pk.pack(g), block_p=512)
+    cos_k = np.asarray(part[:, 0] / np.sqrt(part[:, 1] * part[:, 2] + 1e-12))
+    np.testing.assert_allclose(cos_k, np.asarray(d_exp["cos"]), atol=1e-5)
+
+
+@pytest.mark.parametrize("use_importance,use_staleness",
+                         [(False, True), (True, False), (False, False)])
+def test_flat_engine_ablation_switches(use_importance, use_staleness):
+    K = 4
+    rng = np.random.default_rng(3)
+    g = random_tree(rng, {"w": (30, 4)})
+    clients = [jax.tree.map(
+        lambda x: x + 0.2 * jnp.asarray(rng.normal(size=x.shape), x.dtype), g)
+        for _ in range(K)]
+    sizes = jnp.asarray([10.0, 20.0, 30.0, 40.0])
+    stale = jnp.asarray([0.0, 1.0, 2.0, 3.0])
+    hyper = SeaflHyper(use_importance=use_importance,
+                       use_staleness=use_staleness)
+    deltas = [tree_sub(c, g) for c in clients]
+    tree_out, diag = seafl_aggregate(g, tree_stack(clients),
+                                     tree_stack(deltas), sizes, stale, hyper)
+    pk = ParamPacker(g)
+    out, p = agg_ops.seafl_aggregate_flat_from_params(
+        pk.pack(g), jnp.stack([pk.pack(c) for c in clients]), sizes, stale,
+        hyper.alpha, hyper.mu, hyper.beta, hyper.theta,
+        use_importance=use_importance, use_staleness=use_staleness)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(diag["weights"]),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(pk.pack(tree_out)),
+                               atol=1e-5)
+
+
+# ----------------------------------------------- baseline flat weight rules
+
+def test_fedavg_flat_matches_pytree():
+    K = 5
+    rng = np.random.default_rng(1)
+    clients = [random_tree(rng, {"w": (12, 3)}) for _ in range(K)]
+    sizes = jnp.asarray(rng.integers(1, 50, K), jnp.float32)
+    ref = fedavg_aggregate(tree_stack(clients), sizes)
+    pk = ParamPacker(clients[0])
+    out, w = agg_ops.fedavg_aggregate_flat(
+        jnp.zeros((pk.size,)), jnp.stack([pk.pack(c) for c in clients]), sizes)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(pk.pack(ref)),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(w),
+                               np.asarray(sizes) / float(np.sum(sizes)),
+                               atol=1e-6)
+
+
+def test_fedbuff_flat_matches_delta_form():
+    """(1-eta) g + eta mean(w_k)  ==  g + eta mean(w_k - g)."""
+    K, eta = 4, 0.7
+    rng = np.random.default_rng(2)
+    g = random_tree(rng, {"w": (9, 5)})
+    clients = [jax.tree.map(
+        lambda x: x + jnp.asarray(rng.normal(size=x.shape), x.dtype), g)
+        for _ in range(K)]
+    deltas = tree_stack([tree_sub(c, g) for c in clients])
+    ref = fedbuff_aggregate(g, deltas, eta)
+    pk = ParamPacker(g)
+    out, w = agg_ops.fedbuff_aggregate_flat(
+        pk.pack(g), jnp.stack([pk.pack(c) for c in clients]), eta)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(pk.pack(ref)),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(w), np.full(K, 1.0 / K), atol=1e-6)
+
+
+def test_fedasync_flat_matches_pytree():
+    rng = np.random.default_rng(4)
+    g = random_tree(rng, {"w": (21,)})
+    c = jax.tree.map(
+        lambda x: x + jnp.asarray(rng.normal(size=x.shape), x.dtype), g)
+    for stale in (0.0, 3.0, 11.0):
+        ref = fedasync_aggregate(g, c, stale, 0.6, 0.5)
+        pk = ParamPacker(g)
+        out = agg_ops.fedasync_aggregate_flat(pk.pack(g), pk.pack(c),
+                                              stale, 0.6, 0.5)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(pk.pack(ref)),
+                                   atol=1e-5)
+
+
+def test_server_seafl_importance_vs_current_global_under_staleness():
+    """Pin the delta-free semantic (deliberate change from the seed): for
+    stale updates the Eq. (5) cosine is measured against the *current*
+    global — cos(w_k - w_t^g, w_t^g), the seafl_aggregate_from_params
+    identity — not the dispatch-version base the pre-flat-engine server
+    used.  This is what lets the (K, P) buffer hold params only."""
+    from repro.core.aggregation import seafl_weights
+    s = make_server()                      # K=3, M=6, beta=4
+    s.start()
+    rng = np.random.default_rng(5)
+    drive(s, 3)                            # round 1; 3 clients still at v0
+    assert s.round == 1
+    g_before = np.asarray(s.global_flat)   # constant until next aggregation
+    flats, sizes, ev = [], [], None
+    while ev is None:
+        cid = sorted(s.active)[-1]         # version-0 holders -> staleness 1
+        base = s.params_at(s.active[cid])
+        w = jax.tree.map(lambda x: x + jnp.asarray(
+            rng.normal(size=x.shape).astype(np.float32)) * 0.05, base)
+        flats.append(np.asarray(s.packer.pack(w)))
+        sizes.append(s.client_sizes[cid])
+        ev = s.on_update(cid, w, n_epochs=5)
+    assert float(np.max(ev.staleness)) > 0, "must exercise the stale regime"
+    W, g = np.stack(flats), g_before
+    d = W - g                              # delta vs CURRENT global
+    cos = (d @ g) / np.sqrt((d * d).sum(1) * (g @ g) + 1e-12)
+    expect = np.asarray(seafl_weights(
+        np.asarray(sizes, np.float32), ev.staleness,
+        cos.astype(np.float32), s.cfg.hyper()))
+    np.testing.assert_allclose(ev.weights, expect, atol=1e-4)
+
+
+def test_server_fedbuff_uses_per_version_bases():
+    """FedBuff deltas are vs each client's dispatch version: the flat engine
+    plus the server's base-mix correction must reproduce the pytree
+    fedbuff_aggregate(g, stack(w_k - base_k), eta) exactly."""
+    from repro.core.aggregation import fedbuff_aggregate
+    cfg = FLConfig(algorithm="fedbuff", n_clients=10, concurrency=5,
+                   buffer_size=3, seed=0, fedbuff_eta_g=0.9)
+    params = {"w": jnp.zeros((17,)), "b": {"c": jnp.ones((4, 2))}}
+    s = SeaflServer(cfg, params, {i: 10 for i in range(10)})
+    s.start()
+    rng = np.random.default_rng(0)
+    oracle, pending = params, {}
+    aggs = 0
+    for _ in range(12):
+        cid = sorted(s.active)[0]
+        base = s.params_at(s.active[cid])
+        w = jax.tree.map(lambda x: x + jnp.asarray(
+            rng.normal(size=x.shape).astype(np.float32)) * 0.1, base)
+        pending[cid] = tree_sub(w, base)
+        ev = s.on_update(cid, w, n_epochs=2)
+        if ev is not None:
+            deltas = tree_stack([pending[c] for c in ev.contributors])
+            oracle = fedbuff_aggregate(oracle, deltas, cfg.fedbuff_eta_g)
+            np.testing.assert_allclose(np.asarray(s.global_flat),
+                                       np.asarray(s.packer.pack(oracle)),
+                                       atol=1e-5)
+            pending = {}
+            aggs += 1
+    assert aggs >= 3
+
+
+# -------------------------------------------------- server-level invariants
+
+def make_server(algorithm="seafl", **kw):
+    params = {"w": jnp.zeros((6, 3)), "b": {"c": jnp.zeros((5,))}}
+    cfg = FLConfig(algorithm=algorithm, n_clients=12, concurrency=6,
+                   buffer_size=3, staleness_limit=4.0, seed=0, **kw)
+    return SeaflServer(cfg, params, {i: 10 * (i + 1) for i in range(12)})
+
+
+def drive(server, n_updates, delta=0.01, rng=None):
+    for _ in range(n_updates):
+        if not server.active:
+            break
+        cid = sorted(server.active)[0]
+        base = server.params_at(server.active[cid])
+        w = jax.tree.map(lambda x: x + delta, base)
+        server.on_update(cid, w, n_epochs=5)
+
+
+def test_server_history_is_flat_and_deltas_gone():
+    s = make_server()
+    s.start()
+    drive(s, 9)
+    assert s.round >= 2
+    for v, buf in s._history.items():
+        assert buf.ndim == 1 and buf.shape == (s.packer.size,)
+    # buffer stores metadata only — no params/delta pytrees per update
+    from repro.core.buffer import Update
+    assert {f.name for f in Update.__dataclass_fields__.values()} == {
+        "client_id", "n_samples", "version", "n_epochs", "recv_time", "meta"}
+    # params round-trips through the packer at the dispatch boundary
+    np.testing.assert_allclose(
+        np.asarray(s.packer.pack(s.params)), np.asarray(s.global_flat))
+
+
+def test_server_ef_residual_survives_checkpoint():
+    """compression=topk:* error memory must persist across a restart."""
+    rng = np.random.default_rng(0)
+
+    def drive_random(server, n):
+        for _ in range(n):
+            cid = sorted(server.active)[0]
+            base = server.params_at(server.active[cid])
+            w = jax.tree.map(
+                lambda x: x + jnp.asarray(
+                    rng.normal(size=x.shape).astype(np.float32)) * 0.1, base)
+            server.on_update(cid, w, n_epochs=5)
+
+    s = make_server(compression="topk:0.25")
+    s.start()
+    # a multiple of K so the buffer is drained at checkpoint time (the
+    # standard save path checkpoints at round boundaries)
+    drive_random(s, 6)
+    assert len(s.buffer) == 0
+    assert s._ef, "EF state should exist after compressed updates"
+    state, trees = s.state_dict(), s.checkpoint_trees()
+    assert any(k.startswith("ef") for k in trees)
+
+    s2 = make_server(compression="topk:0.25")
+    s2.load_state(state, trees)
+    assert sorted(s2._ef) == sorted(
+        c for c, ef in s._ef.items() if ef._residual is not None)
+    for cid in s2._ef:
+        # per-leaf residual pytrees (compression quantises each layer
+        # separately) restored leaf-for-leaf
+        a_leaves = jax.tree.leaves(s2._ef[cid]._residual)
+        b_leaves = jax.tree.leaves(s._ef[cid]._residual)
+        assert len(a_leaves) == len(b_leaves) > 1
+        for a, b in zip(a_leaves, b_leaves):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    # identical future behaviour: same update stream -> identical params
+    rng_a, rng_b = np.random.default_rng(9), np.random.default_rng(9)
+    for srv, r in ((s, rng_a), (s2, rng_b)):
+        for _ in range(4):
+            cid = sorted(srv.active)[0]
+            base = srv.params_at(srv.active[cid])
+            w = jax.tree.map(
+                lambda x: x + jnp.asarray(
+                    r.normal(size=x.shape).astype(np.float32)) * 0.1, base)
+            srv.on_update(cid, w, n_epochs=5)
+    np.testing.assert_allclose(np.asarray(s2.global_flat),
+                               np.asarray(s.global_flat), atol=1e-7)
+
+
+def test_sync_wait_spill_beyond_capacity():
+    """While sync-wait holds aggregation the slot buffer grows past K and the
+    eventual aggregation consumes every buffered update."""
+    s = make_server(algorithm="seafl")
+    s.start()
+    # freeze one in-flight client so staleness climbs: never let cid0 report
+    frozen = sorted(s.active)[0]
+    rng = np.random.default_rng(0)
+    max_contrib = 0
+    for _ in range(40):
+        live = [c for c in sorted(s.active) if c != frozen]
+        if not live:
+            break
+        cid = live[-1]
+        base = s.params_at(s.active[cid])
+        w = jax.tree.map(lambda x: x + 0.01, base)
+        ev = s.on_update(cid, w, n_epochs=5)
+        if ev is not None:
+            max_contrib = max(max_contrib, len(ev.contributors))
+    assert max_contrib >= s.cfg.buffer_size
+    assert len(s.buffer) < s.buffer.capacity or s._blocked_by_stale()

@@ -19,6 +19,7 @@ def exp_cfg(algorithm="seafl", **fl_kw):
                             fl=fl, sim=SimConfig(seed=1), seed=1)
 
 
+@pytest.mark.slow
 def test_seafl_learns():
     sim, hist = run_experiment(exp_cfg("seafl"), max_rounds=30)
     accs = [h["acc"] for h in hist if "acc" in h]
@@ -27,12 +28,14 @@ def test_seafl_learns():
     assert all(np.isfinite(h["loss"]) for h in hist)
 
 
+@pytest.mark.slow
 def test_all_algorithms_run_end_to_end():
     for algo in ("seafl", "seafl2", "fedbuff", "fedavg", "fedasync"):
         sim, hist = run_experiment(exp_cfg(algo), max_rounds=6)
         assert len(hist) >= 1, algo
 
 
+@pytest.mark.slow
 def test_server_checkpoint_restart_resumes():
     """Fault tolerance: checkpoint mid-training, rebuild a fresh server from
     disk, resume — round/params/rng identical, training continues."""

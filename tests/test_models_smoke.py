@@ -11,7 +11,13 @@ from repro.models import build_model
 from repro.launch.specs import make_train_step
 from repro.optim import sgd, TrainState
 
-ARCHS = list_configs()
+ARCHS_ALL = list_configs()
+# the biggest smoke configs compile for 5-20 s each; tier-1 keeps the light
+# half of the zoo and runs the heavy archs only on --runslow
+_HEAVY = {"mixtral-8x22b", "deepseek-v2-lite-16b", "recurrentgemma-2b",
+          "mamba2-1.3b", "granite-34b"}
+ARCHS = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
+         for a in ARCHS_ALL]
 
 
 def _batch(cfg, rng, B=2, S=32):
@@ -62,7 +68,8 @@ def test_train_step_no_nans(arch):
     assert max(jax.tree.leaves(diffs)) > 0
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ARCHS_ALL)
 def test_train_step_microbatched_matches_flops(arch):
     """Gradient accumulation (M=2) yields finite loss and same param shapes."""
     cfg = smoke_config(arch)
@@ -76,6 +83,7 @@ def test_train_step_microbatched_matches_flops(arch):
     assert np.isfinite(float(metrics["loss"]))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen3-32b", "mixtral-8x22b",
                                   "recurrentgemma-2b", "mamba2-1.3b",
                                   "deepseek-v2-lite-16b"])
@@ -99,7 +107,7 @@ def test_decode_matches_forward(arch):
     assert max(errs) < 1e-3, errs
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCHS_ALL)   # abstract init: always cheap
 def test_full_config_param_count_close_to_analytic(arch):
     """abstract init (no allocation) roughly matches the analytic count."""
     cfg = get_config(arch)

@@ -3,6 +3,9 @@ test scale — the full-scale versions live in benchmarks/)."""
 import numpy as np
 import pytest
 
+# full simulated-training comparisons: tier-1 runs them only on --runslow
+pytestmark = pytest.mark.slow
+
 from repro.core.server import FLConfig
 from repro.experiment import ExperimentConfig, run_experiment
 from repro.runtime.simulator import SimConfig
