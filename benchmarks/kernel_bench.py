@@ -9,11 +9,16 @@ target-hardware facts used in EXPERIMENTS.md §Perf.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+BENCH_INGEST_JSON = os.path.join(os.path.dirname(__file__),
+                                 "BENCH_ingest.json")
 
 
 def _time(fn, *args, reps=5):
@@ -190,5 +195,90 @@ def bench_scan_kernels():
     return rows
 
 
+def bench_ingest():
+    """Streaming uplink ingest: wire bytes per scheme, chunked-decode+write
+    throughput into the (K, P) buffer, and bf16 vs f32 buffer HBM.
+
+    Also emits BENCH_ingest.json next to this file so the perf trajectory
+    of the transport subsystem is tracked from PR to PR.
+    """
+    from repro.core.buffer import Update, UpdateBuffer
+    from repro.kernels.seafl_agg.ref import seafl_aggregate_flat_from_params_ref
+    from repro.runtime.transport import (
+        IngestSession, encode_update, make_wire_format,
+    )
+
+    rows = []
+    K, P = 8, 1_000_000
+    rng = np.random.default_rng(0)
+    base = jnp.asarray(rng.normal(size=P).astype(np.float32))
+    clients = [base + 0.1 * jnp.asarray(rng.normal(size=P).astype(np.float32))
+               for _ in range(K)]
+    report: dict = {"K": K, "P": P, "schemes": {}, "buffer": {}}
+
+    for spec in ["f32", "bf16", "topk:0.1", "int8"]:
+        fmt = make_wire_format(spec, chunk_elems=1 << 16)
+        payloads = [encode_update(i, 0, 1, clients[i], fmt,
+                                  base_flat=base if fmt.delta_coded else None)
+                    for i in range(K)]
+        jax.block_until_ready([c.payload for c in payloads[0].chunks])
+
+        def ingest_all():
+            buf = UpdateBuffer(K, P)
+            for i, pl in enumerate(payloads):
+                slot = buf.reserve(Update(i, 1, 0, 1))
+                sess = IngestSession(
+                    buf, slot, fmt,
+                    base_flat=base if fmt.delta_coded else None)
+                for c in pl.chunks:
+                    sess.write(c)
+                sess.finish()
+                buf.commit(slot)
+            return buf
+
+        ingest_all()                       # warm the chunk-write jits
+        t0 = time.perf_counter()
+        jax.block_until_ready(ingest_all().stacked_flat())
+        dt = time.perf_counter() - t0
+        wire = sum(pl.nbytes for pl in payloads)
+        decoded_mb = K * P * 4 / 2**20     # f32 params landed in the buffer
+        ratio = (K * P * 4) / wire
+        rows.append((f"ingest/{spec}", f"{decoded_mb / dt:.0f}",
+                     f"MBps_chunked_decode_write;wire_bytes={wire};"
+                     f"compression={ratio:.2f}x;chunks_per_upload="
+                     f"{len(payloads[0].chunks)}"))
+        report["schemes"][spec] = {
+            "wire_bytes": int(wire),
+            "wire_bytes_per_update": int(wire // K),
+            "compression_vs_f32_params": round(ratio, 3),
+            "ingest_MBps": round(decoded_mb / dt, 1),
+        }
+
+    # bf16 buffer mode: HBM halves, aggregation parity stays <= 1e-2
+    sizes = jnp.ones(K)
+    stale = jnp.zeros(K)
+    outs = {}
+    for dt_name, dt_ in [("float32", jnp.float32), ("bfloat16", jnp.bfloat16)]:
+        buf = UpdateBuffer(K, P, dtype=dt_)
+        for i, c in enumerate(clients):
+            buf.add(Update(i, 1, 0, 1), c)
+        out, _ = jax.jit(seafl_aggregate_flat_from_params_ref)(
+            base, buf.stacked_flat(), sizes, stale, 3.0, 1.0, 10.0, 0.8)
+        outs[dt_name] = np.asarray(out)
+        report["buffer"][dt_name] = {"hbm_bytes": buf.hbm_bytes}
+    parity = float(np.max(np.abs(outs["bfloat16"] - outs["float32"])))
+    hbm32 = report["buffer"]["float32"]["hbm_bytes"]
+    hbm16 = report["buffer"]["bfloat16"]["hbm_bytes"]
+    report["buffer"]["bf16_agg_max_abs_err"] = parity
+    rows.append(("ingest/bf16_buffer", f"{hbm16 / 2**20:.1f}",
+                 f"MiB_vs_{hbm32 / 2**20:.1f}MiB_f32"
+                 f"({hbm32 / hbm16:.1f}x);agg_max_abs_err={parity:.2e}"))
+
+    with open(BENCH_INGEST_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(("ingest/report", "1", f"json={BENCH_INGEST_JSON}"))
+    return rows
+
+
 ALL_KERNEL_BENCHES = [bench_agg, bench_flat_vs_pytree, bench_attention,
-                      bench_scan_kernels]
+                      bench_scan_kernels, bench_ingest]

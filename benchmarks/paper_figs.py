@@ -1,4 +1,5 @@
-"""One benchmark per paper figure (Figs. 2a/2b/2c, 4, 5, 6).
+"""One benchmark per paper figure (Figs. 2a/2b/2c, 4, 5, 6) plus fig7, the
+transport subsystem's bytes-vs-accuracy axis.
 
 Each returns a list of (name, value, derived) CSV rows.  Values are simulated
 wall-clock seconds to a fixed target accuracy (the paper's §VI metric), or
@@ -127,5 +128,27 @@ def fig6_partial_training():
     return rows
 
 
+def fig7_bytes_vs_accuracy():
+    """Fig. 7 (new axis) — uplink wire format under the bandwidth model:
+    simulated time-to-target and uplink bytes-to-target per scheme.  With
+    per-client Pareto bandwidths the upload time is computed from the actual
+    chunked-transport payload, so compression moves the wall-clock curve,
+    not just a bytes column."""
+    rows = []
+    for spec, tag in [(None, "f32"), ("bf16", "bf16"),
+                      ("topk:0.1", "topk0.1"), ("int8", "int8")]:
+        fl = base_fl("seafl", compression=spec)
+        cfg = base_exp(fl, speed="pareto", bandwidth_model="pareto",
+                       up_mbps=2.0, down_mbps=50.0)
+        res = run(cfg, target=TARGET, max_rounds=120)
+        bta = res["sim"].bytes_to_accuracy(TARGET)
+        rows.append((f"fig7/{tag}", f"{_tta(res):.1f}",
+                     f"bytes_to_target={bta if bta is not None else 'inf'};"
+                     f"total_bytes={res['hist'][-1]['bytes']};"
+                     f"best_acc={res['best_acc']:.3f}"))
+    return rows
+
+
 ALL_FIGS = [fig2a_buffer_size, fig2b_staleness_limit, fig2c_importance,
-            fig4_alpha_mu, fig5_baselines, fig6_partial_training]
+            fig4_alpha_mu, fig5_baselines, fig6_partial_training,
+            fig7_bytes_vs_accuracy]

@@ -1,15 +1,38 @@
 """K-slot update buffer (Algorithm 1 'Server stores received updates').
 
-Host-side metadata + one preallocated ``(K, P)`` f32 device buffer.  Incoming
-client params arrive as flat ``ParamPacker`` vectors and are written
-slot-by-slot with a donated dynamic-update (no per-aggregation ``tree_stack``,
-no stored delta pytrees — the Eq. (5) cosine terms are recovered delta-free by
-kernels/seafl_agg).  In cohort mode the leading K axis shards over the 'pod'
-mesh axis (updates stay resident where they were produced; aggregation is a
-weighted reduction over that axis — see sharding.DEFAULT_RULES['buffer']).
+Host-side metadata + one preallocated ``(K, P)`` device buffer.  Client
+updates arrive over the chunked uplink transport (runtime/transport.py) and
+are written *chunk by chunk* into a reserved slot with donated
+dynamic-updates — no per-aggregation ``tree_stack``, no stored delta pytrees,
+no transient (P,) staging vector (the Eq. (5) cosine terms are recovered
+delta-free by kernels/seafl_agg).
+
+Two storage modes (``dtype``): f32 slots, or bf16 slots at half the HBM —
+the seafl_agg kernels accumulate in f32 either way, so bf16 storage costs
+~3 decimal digits on the stored params, not on the reductions.
+
+The leading K axis is placed over the 'pod' mesh axis when one is active
+(``sharding.DEFAULT_RULES['buffer']`` via ``shard_update_buffer``): cohort
+updates stay resident on the pod that produced them and aggregation becomes
+a sharded reduction over the slot axis.
+
+Slot protocol (slots are *physical rows*, decoupled from commit order so
+concurrent streams may finish — or die — in any order):
+  ``reserve(meta) -> slot``    claim a free row (grows past K under SEAFL
+                               sync-wait spill);
+  ``write_range(slot, off, v)``  donated chunk write into that row;
+  ``commit(slot)``             the upload completed; the slot joins the
+                               committed sequence (arrival order);
+  ``release(slot)``            the upload died mid-stream; the row returns
+                               to the free pool.
+``add`` keeps the legacy monolithic one-call write on top of the same
+protocol.  ``stacked_flat`` is a zero-copy slice whenever the committed rows
+are contiguous from 0 (the common, single-stream case) and a gather
+otherwise.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Optional
@@ -17,12 +40,15 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.sharding import shard_update_buffer
+
 
 @partial(jax.jit, donate_argnums=(0,))
-def _write_slot(buf: jnp.ndarray, i: jnp.ndarray, flat: jnp.ndarray):
-    """In-place (donated) write of one (P,) vector into row i of (K, P)."""
-    return jax.lax.dynamic_update_index_in_dim(
-        buf, flat.astype(buf.dtype), i, axis=0)
+def _write_range(buf: jnp.ndarray, slot: jnp.ndarray, start: jnp.ndarray,
+                 vals: jnp.ndarray):
+    """In-place (donated) write of one chunk into row ``slot`` at ``start``."""
+    return jax.lax.dynamic_update_slice(
+        buf, vals.astype(buf.dtype)[None, :], (slot, start))
 
 
 @dataclass
@@ -39,58 +65,137 @@ class Update:
 class UpdateBuffer:
     """Fixed-capacity slot buffer: metadata list + (capacity, P) device array."""
 
-    def __init__(self, capacity: int, param_size: Optional[int] = None):
+    def __init__(self, capacity: int, param_size: Optional[int] = None,
+                 dtype=jnp.float32):
         self.capacity = int(capacity)
         self.param_size = param_size
-        self._meta: list[Update] = []
+        self.dtype = jnp.dtype(dtype)
+        self._committed: list[tuple[Update, int]] = []   # (meta, row), arrival
+        self._pending: dict[int, Update] = {}            # row -> meta
+        self._free: list[int] = list(range(self.capacity))  # min-heap
         self._buf: Optional[jnp.ndarray] = None
         if param_size is not None:
-            self._buf = jnp.zeros((self.capacity, int(param_size)),
-                                  jnp.float32)
+            self._buf = self._alloc(self.capacity, int(param_size))
+
+    def _alloc(self, rows: int, p: int) -> jnp.ndarray:
+        return shard_update_buffer(jnp.zeros((rows, p), self.dtype))
 
     def __len__(self) -> int:
-        return len(self._meta)
+        return len(self._committed)
 
     @property
     def full(self) -> bool:
-        return len(self._meta) >= self.capacity
+        return len(self._committed) >= self.capacity
+
+    @property
+    def streaming(self) -> bool:
+        """True while any reserved slot has not been committed."""
+        return bool(self._pending)
+
+    @property
+    def hbm_bytes(self) -> int:
+        """Allocated device bytes of the slot array (the bf16-mode metric)."""
+        if self._buf is None:
+            return 0
+        return int(self._buf.size) * self._buf.dtype.itemsize
+
+    # ---------------------------------------------------------- slot protocol
+    def _grow(self) -> None:
+        # SEAFL sync-wait can hold aggregation while updates keep landing
+        # (paper §IV-B): spill past K by doubling the slot array.  A
+        # pod-sharded operand must be replicated before the eager
+        # concatenate (mixed-sharding concat mis-reduces the replicated
+        # mesh axes), then the doubled array is re-placed.
+        old = self._buf
+        sh = getattr(old, "sharding", None)
+        if isinstance(sh, jax.sharding.NamedSharding):
+            old = jax.device_put(old, jax.sharding.NamedSharding(
+                sh.mesh, jax.sharding.PartitionSpec()))
+        rows = old.shape[0]
+        grow = jnp.zeros((rows, self.param_size), self.dtype)
+        self._buf = shard_update_buffer(jnp.concatenate([old, grow], axis=0))
+        for r in range(rows, 2 * rows):
+            heapq.heappush(self._free, r)
+
+    def reserve(self, u: Update, param_size: Optional[int] = None) -> int:
+        """Claim a free slot for a streaming upload."""
+        if self._buf is None:                 # lazy alloc from first update
+            if param_size is None:
+                raise ValueError(
+                    "UpdateBuffer was built without param_size; the first "
+                    "reserve() must pass param_size= (add() infers it from "
+                    "the flat vector)")
+            self.param_size = int(param_size)
+            self._buf = self._alloc(self.capacity, self.param_size)
+        if not self._free:
+            self._grow()
+        slot = heapq.heappop(self._free)
+        self._pending[slot] = u
+        return slot
+
+    def write_range(self, slot: int, start: int, vals: jnp.ndarray) -> None:
+        """Donated write of ``vals`` into row ``slot`` at element ``start``."""
+        self._buf = _write_range(self._buf, jnp.int32(slot),
+                                 jnp.int32(start), vals)
+
+    def commit(self, slot: int) -> None:
+        """The upload for ``slot`` completed; make it visible to readers.
+        Commits may land in any order (concurrent streams)."""
+        if slot not in self._pending:
+            raise RuntimeError(f"slot {slot} is not a reserved slot")
+        self._committed.append((self._pending.pop(slot), slot))
+
+    def release(self, slot: int) -> None:
+        """The upload for ``slot`` died mid-stream; recycle the row."""
+        if slot not in self._pending:
+            raise RuntimeError(f"slot {slot} is not a reserved slot")
+        self._pending.pop(slot)
+        heapq.heappush(self._free, slot)
 
     def add(self, u: Update, flat_params: jnp.ndarray) -> None:
-        if self._buf is None:                 # lazy alloc from first update
-            self.param_size = int(flat_params.shape[0])
-            self._buf = jnp.zeros((self.capacity, self.param_size),
-                                  jnp.float32)
-        slot = len(self._meta)
-        if slot >= self._buf.shape[0]:
-            # SEAFL sync-wait can hold aggregation while updates keep landing
-            # (paper §IV-B): spill past K by doubling the slot array.
-            grow = jnp.zeros((self._buf.shape[0], self.param_size),
-                             jnp.float32)
-            self._buf = jnp.concatenate([self._buf, grow], axis=0)
-        self._buf = _write_slot(self._buf, jnp.int32(slot), flat_params)
-        self._meta.append(u)
+        """Legacy monolithic path: reserve + one full-row write + commit."""
+        slot = self.reserve(u, param_size=int(flat_params.shape[0]))
+        self.write_range(slot, 0, flat_params)
+        self.commit(slot)
 
+    # ----------------------------------------------------------------- reads
     def updates(self) -> list[Update]:
-        return list(self._meta)
+        return [u for u, _ in self._committed]
 
     def staleness(self, current_round: int) -> jnp.ndarray:
-        return jnp.asarray([current_round - u.version for u in self._meta],
-                           jnp.float32)
+        return jnp.asarray([current_round - u.version
+                            for u, _ in self._committed], jnp.float32)
 
     def data_sizes(self) -> jnp.ndarray:
-        return jnp.asarray([u.n_samples for u in self._meta], jnp.float32)
+        return jnp.asarray([u.n_samples for u, _ in self._committed],
+                           jnp.float32)
 
     def stacked_flat(self) -> jnp.ndarray:
-        """(k, P) view of the filled slots (k == capacity at trigger time)."""
+        """(k, P) view of the committed slots in arrival order.  Zero-copy
+        slice when the rows are 0..k-1 (single-stream case); gather when
+        concurrent streams committed out of order."""
         if self._buf is None:
             raise RuntimeError("UpdateBuffer is empty")
-        k = len(self._meta)
-        return self._buf if k == self._buf.shape[0] else self._buf[:k]
+        rows = [r for _, r in self._committed]
+        if rows == list(range(self._buf.shape[0])):
+            return self._buf
+        if rows == list(range(len(rows))):
+            return self._buf[:len(rows)]
+        return self._buf[jnp.asarray(rows, jnp.int32)]
+
+    def row(self, i: int) -> jnp.ndarray:
+        """(P,) view of the i-th committed update (checkpointing non-empty
+        buffers)."""
+        return self._buf[self._committed[i][1]]
 
     def drain(self) -> list[Update]:
-        """Reset to empty; slot storage is reused (no realloc)."""
-        out, self._meta = self._meta, []
+        """Consume the committed slots; rows return to the free pool.
+        Mid-stream reservations survive (their rows stay claimed)."""
+        out = [u for u, _ in self._committed]
+        for _, r in self._committed:
+            heapq.heappush(self._free, r)
+        self._committed = []
         return out
 
     def client_ids(self) -> list[int]:
-        return [u.client_id for u in self._meta]
+        return [u.client_id for u, _ in self._committed]

@@ -12,14 +12,21 @@ Policies (paper §VI comparison set):
   seafl2   — seafl + partial-training notifications (Algorithm 2)
 
 Hot path: every algorithm aggregates through the flat (K, P) buffer engine
-(kernels/seafl_agg) — incoming client params are packed once by ParamPacker
-into a preallocated device buffer slot, the Eq. (5) cosine terms are
-recovered delta-free (no delta pytrees are ever built or stored), and model
-versions live in ``_history`` as flat (P,) buffers, unpacked lazily only at
-dispatch / eval / checkpoint boundaries.
+(kernels/seafl_agg).  Uploads arrive over the chunked uplink transport
+(runtime/transport.py): ``encode_update`` serialises the client's packed
+(P,) vector into wire chunks (raw f32/bf16 or topk/int8-compressed deltas
+with flat error feedback), and ``begin_ingest``/``ingest_chunk``/
+``finish_ingest`` decode each chunk straight into the reserved (K, P) buffer
+slot — no host pytree staging, no transient delta pytree, no (P,) reassembly
+buffer.  The Eq. (5) cosine terms are recovered delta-free in the kernels and
+model versions live in ``_history`` as flat (P,) f32 buffers, unpacked lazily
+only at dispatch / eval / checkpoint boundaries.  The buffer itself can store
+slots in bf16 (``FLConfig.buffer_dtype``) at half the HBM; the kernels
+accumulate in f32 regardless.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -29,12 +36,17 @@ import numpy as np
 
 from repro.core.aggregation import SeaflHyper
 from repro.core.buffer import Update, UpdateBuffer
+from repro.runtime.transport import (
+    Chunk, FlatErrorFeedback, IngestSession, UploadPayload,
+    encode_update as transport_encode_update, make_wire_format,
+)
 from repro.core.packer import ParamPacker
-from repro.runtime.compression import ErrorFeedback, make_compressor
 
 PyTree = Any
 
 ALGORITHMS = ("seafl", "seafl2", "fedbuff", "fedasync", "fedavg")
+
+BUFFER_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
 
 
 @dataclass(frozen=True)
@@ -56,7 +68,10 @@ class FLConfig:
     fedbuff_eta_g: float = 1.0
     fedasync_alpha0: float = 0.6
     fedasync_poly_a: float = 0.5
-    compression: Optional[str] = None   # None | 'topk:<ratio>' | 'int8'
+    # uplink wire format: None (= raw f32) | 'bf16' | 'topk:<ratio>' | 'int8'
+    compression: Optional[str] = None
+    chunk_elems: int = 1 << 16       # wire chunk granularity (elements)
+    buffer_dtype: str = "float32"    # 'float32' | 'bfloat16' slot storage
     seed: int = 0
 
     def hyper(self) -> SeaflHyper:
@@ -82,11 +97,17 @@ class SeaflServer:
     def __init__(self, cfg: FLConfig, params: PyTree,
                  client_sizes: dict[int, int]):
         assert cfg.algorithm in ALGORITHMS, cfg.algorithm
+        if cfg.buffer_dtype not in BUFFER_DTYPES:
+            raise ValueError(f"buffer_dtype must be one of "
+                             f"{sorted(BUFFER_DTYPES)}, got {cfg.buffer_dtype}")
         self.cfg = cfg
         self.packer = ParamPacker(params)
         self._flat = self.packer.pack(params)          # current global, (P,)
         self.round = 0
-        self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size)
+        self.wire = make_wire_format(cfg.compression, cfg.chunk_elems)
+        self._buffer_dtype = BUFFER_DTYPES[cfg.buffer_dtype]
+        self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size,
+                                   dtype=self._buffer_dtype)
         self.client_sizes = client_sizes
         self.active: dict[int, int] = {}         # cid -> version t_k
         self.idle: set[int] = set(client_sizes)
@@ -95,9 +116,9 @@ class SeaflServer:
         self._notified: set[int] = set()
         self._rng = np.random.default_rng(cfg.seed)
         self.total_aggregations = 0
-        self.bytes_uploaded = 0
-        self._ef: dict[int, ErrorFeedback] = {}
-        self._compressor_spec = cfg.compression
+        self.bytes_uploaded = 0                  # wire bytes, every scheme
+        self._ef: dict[int, FlatErrorFeedback] = {}
+        self._ingests: dict[int, IngestSession] = {}   # cid -> mid-stream
 
     # ------------------------------------------------------------- plumbing
     def _trigger_size(self) -> int:
@@ -159,6 +180,7 @@ class SeaflServer:
     def mark_failed(self, cid: int):
         """Client died mid-training: return a replacement dispatch if any."""
         self.active.pop(cid, None)
+        self.abort_ingest(cid)           # a mid-stream upload dies with it
         # the dead client may rejoin the idle pool later (recovery)
         repl = self._sample_idle(1)
         for c in repl:
@@ -191,32 +213,85 @@ class SeaflServer:
         self._notified.update(out)
         return out
 
+    # ------------------------------------------------------- uplink transport
+    def encode_update(self, cid: int, client_params: PyTree,
+                      n_epochs: int) -> UploadPayload:
+        """Client-side encoder (simulated on the server object): pack once,
+        then serialise to wire chunks per the configured WireFormat.  For
+        delta-coded schemes (topk/int8) the delta is taken vs the dispatch
+        version and the client's flat error-feedback residual is folded in
+        and updated — per-leaf delta pytrees are never built."""
+        version = self.active[cid]
+        flat = self.packer.pack(client_params)
+        base = ef = None
+        if self.wire.delta_coded:
+            base = self._history[version]
+            ef = self._ef.setdefault(cid, FlatErrorFeedback())
+        return transport_encode_update(cid, version, n_epochs, flat,
+                                       self.wire, base, ef)
+
+    def begin_ingest(self, cid: int, version: int, n_epochs: int,
+                     recv_time: float = 0.0) -> IngestSession:
+        """Open a streaming ingest: reserve a buffer slot for ``cid``'s
+        upload and return the session that decodes chunks into it."""
+        if cid in self._ingests:
+            raise RuntimeError(f"client {cid} already has an ingest open")
+        base = self._history[version] if self.wire.delta_coded else None
+        slot = self.buffer.reserve(Update(
+            client_id=cid, n_samples=self.client_sizes[cid], version=version,
+            n_epochs=n_epochs, recv_time=recv_time))
+        sess = IngestSession(self.buffer, slot, self.wire, base,
+                             param_size=self.packer.size)
+        self._ingests[cid] = sess
+        return sess
+
+    def ingest_chunk(self, cid: int, chunk: Chunk) -> None:
+        self._ingests[cid].write(chunk)
+
+    def abort_ingest(self, cid: int) -> None:
+        """Drop a mid-stream upload (truncated stream, dead client): the
+        session is discarded and its reserved buffer slot is recycled."""
+        sess = self._ingests.pop(cid, None)
+        if sess is not None:
+            self.buffer.release(sess.slot)
+
+    def finish_ingest(self, cid: int,
+                      recv_time: float = 0.0) -> Optional[AggregationEvent]:
+        """Close the stream: validate coverage, commit the slot, account the
+        wire bytes (compressed or not — the bandwidth model and the bench
+        tables both need raw-f32 payloads counted), and aggregate if the
+        buffer triggered.  On incomplete coverage the session stays open
+        (the driver may deliver the missing chunks or ``abort_ingest``).
+        Concurrent streams may finish in any order; uploads still mid-stream
+        keep their reserved rows across an aggregation's drain."""
+        sess = self._ingests[cid]
+        nbytes = sess.finish()           # raises while coverage is incomplete
+        del self._ingests[cid]
+        self.bytes_uploaded += nbytes
+        self.buffer.commit(sess.slot)
+        self.active.pop(cid, None)
+        self.idle.add(cid)
+        if (len(self.buffer) >= self.buffer.capacity
+                and not self._blocked_by_stale()):
+            return self._aggregate(recv_time)
+        return None
+
+    def ingest_payload(self, payload: UploadPayload,
+                       recv_time: float = 0.0) -> Optional[AggregationEvent]:
+        """Atomic ingest of a whole wire payload (the simulator's deliver
+        event and the legacy ``on_update`` both land here)."""
+        self.begin_ingest(payload.cid, payload.version, payload.n_epochs,
+                          recv_time=recv_time)
+        for chunk in payload.chunks:
+            self.ingest_chunk(payload.cid, chunk)
+        return self.finish_ingest(payload.cid, recv_time)
+
     # ----------------------------------------------------------- on_update
     def on_update(self, cid: int, client_params: PyTree, n_epochs: int,
                   recv_time: float = 0.0) -> Optional[AggregationEvent]:
-        version = self.active.pop(cid)
-        self.idle.add(cid)
-        flat = self.packer.pack(client_params)
-        if self._compressor_spec:
-            # uplink ships the compressed *per-leaf* delta vs the version the
-            # client trained from (topk/int8 quantise each layer separately);
-            # the pytree delta is transient — only w_hat = base + delta is
-            # written into the flat buffer.
-            base = self._history[version]
-            if cid not in self._ef:
-                self._ef[cid] = ErrorFeedback(
-                    make_compressor(self._compressor_spec))
-            delta, nbytes = self._ef[cid].roundtrip(
-                self.packer.unpack(flat - base))
-            self.bytes_uploaded += nbytes
-            flat = base + self.packer.pack(delta)
-        self.buffer.add(Update(
-            client_id=cid, n_samples=self.client_sizes[cid], version=version,
-            n_epochs=n_epochs, recv_time=recv_time), flat)
-
-        if len(self.buffer) >= self.buffer.capacity and not self._blocked_by_stale():
-            return self._aggregate(recv_time)
-        return None
+        """Encode + ingest in one step (drivers without an explicit wire)."""
+        payload = self.encode_update(cid, client_params, n_epochs)
+        return self.ingest_payload(payload, recv_time)
 
     # ----------------------------------------------------------- aggregate
     def _aggregate(self, now: float) -> AggregationEvent:
@@ -233,8 +308,8 @@ class SeaflServer:
         staleness = np.asarray([self.round - u.version for u in updates],
                                np.float32)
         sizes = np.asarray([u.n_samples for u in updates], np.float32)
-        stacked = self.buffer.stacked_flat()
-        weights = None
+        stacked = self.buffer.stacked_flat()   # f32 or bf16 slots; kernels
+        weights = None                         # accumulate in f32 either way
 
         if cfg.algorithm == "fedavg":
             self._flat, w = fedavg_aggregate_flat(
@@ -296,9 +371,12 @@ class SeaflServer:
 
     # ------------------------------------------------------ fault tolerance
     def state_dict(self) -> dict:
-        """JSON-able control state (params/history are saved separately via
-        the Checkpointer; buffer is drained at round boundaries so it is
-        empty at checkpoint time in the standard save path)."""
+        """JSON-able control state (arrays are saved separately via the
+        Checkpointer).  Committed buffer slots are persisted — a checkpoint
+        taken while SEAFL sync-wait is holding aggregation must not drop a
+        non-empty buffer.  Uploads still mid-stream (``_ingests``) are *not*
+        persisted: their clients remain listed as active, so a restored
+        driver re-dispatches them and the upload is simply re-sent."""
         return {
             "round": self.round,
             "active": {str(k): int(v) for k, v in self.active.items()},
@@ -308,18 +386,28 @@ class SeaflServer:
             "bytes_uploaded": int(self.bytes_uploaded),
             "rng": self._rng.bit_generator.state,
             "history_versions": sorted(self._history),
+            "buffer": [
+                {"client_id": u.client_id, "n_samples": u.n_samples,
+                 "version": u.version, "n_epochs": u.n_epochs,
+                 "recv_time": u.recv_time}
+                for u in self.buffer.updates()
+            ],
             "ef_clients": sorted(c for c, ef in self._ef.items()
-                                 if ef._residual is not None),
+                                 if ef.residual is not None),
         }
 
     def checkpoint_trees(self) -> dict:
         """Arrays that must be persisted: the flat model at each live
-        version, plus per-client error-feedback residuals (without them a
-        restart under compression=topk:* silently resets error memory)."""
+        version, per-client error-feedback residuals (without them a restart
+        under compression=topk:* silently resets error memory), and the
+        committed (K, P) buffer rows (without them a checkpoint under
+        sync-wait silently drops buffered updates)."""
         trees = {f"v{v}": p for v, p in self._history.items()}
         for cid, ef in self._ef.items():
-            if ef._residual is not None:
-                trees[f"ef{cid}"] = ef._residual
+            if ef.residual is not None:
+                trees[f"ef{cid}"] = ef.residual
+        for i in range(len(self.buffer)):
+            trees[f"slot{i}"] = self.buffer.row(i)
         return trees
 
     def load_state(self, state: dict, trees: dict):
@@ -335,10 +423,31 @@ class SeaflServer:
                          for k, v in trees.items() if k.startswith("v")}
         self._flat = self._history[self.round]
         self._unpack_cache = {}
+        self._ingests = {}
         self._ef = {}
-        for k, v in trees.items():
-            if k.startswith("ef"):
-                ef = ErrorFeedback(make_compressor(self._compressor_spec))
-                ef._residual = jax.tree.map(jnp.asarray, v)
-                self._ef[int(k[2:])] = ef
-        self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size)
+        ef_keys = sorted(k for k in trees if k.startswith("ef"))
+        if ef_keys and not self.wire.delta_coded:
+            # restored config has no delta-coded compression: an EF residual
+            # is meaningless (and would crash the next roundtrip) — drop it.
+            warnings.warn(
+                f"checkpoint carries {len(ef_keys)} error-feedback "
+                f"residual(s) but the restored config uses wire scheme "
+                f"'{self.wire.scheme}'; dropping stale residuals")
+        elif ef_keys:
+            for k in ef_keys:
+                v = trees[k]
+                # flat (P,) residuals are the native format; pre-transport
+                # checkpoints stored per-leaf delta pytrees — pack them.
+                residual = (self.packer.pack(v) if isinstance(v, dict)
+                            else jnp.asarray(v, jnp.float32))
+                self._ef[int(k[2:])] = FlatErrorFeedback(residual)
+        self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size,
+                                   dtype=self._buffer_dtype)
+        for i, m in enumerate(state.get("buffer", [])):
+            self.buffer.add(
+                Update(client_id=int(m["client_id"]),
+                       n_samples=int(m["n_samples"]),
+                       version=int(m["version"]),
+                       n_epochs=int(m["n_epochs"]),
+                       recv_time=float(m["recv_time"])),
+                jnp.asarray(trees[f"slot{i}"]))

@@ -1,15 +1,18 @@
-"""Client->server update compression (distributed-optimization substrate).
+"""Per-leaf pytree update compression — legacy reference substrate.
 
-In cross-device FL the uplink is the scarce resource; SEAFL's buffered
-aggregation composes cleanly with delta compression because the server
-reconstructs approximate client params w_hat = w_base + decompress(c) before
-the Eq. (7) weighted average.  Two standard schemes:
+The production uplink no longer goes through this module: client updates
+travel as flat chunks coded by runtime/transport.py (per-chunk topk/int8 on
+(P,) windows with a flat error-feedback residual), written straight into the
+server's (K, P) buffer slot.  This module keeps the original *per-leaf*
+formulation — each layer quantised separately, pytree-shaped EF residuals —
+as an oracle for the compression math and as the documented format of
+pre-transport checkpoints (``SeaflServer.load_state`` packs such residuals
+into the flat EF).  Expect the two to differ exactly where per-leaf vs
+per-chunk granularity differs (topk thresholds, int8 scales).
 
   * top-k sparsification with client-side error feedback (EF keeps the
     residual and adds it to the next update, preserving convergence);
   * stochastic-free int8 per-leaf affine quantisation.
-
-Both report their achieved compression ratio for the benchmark tables.
 """
 from __future__ import annotations
 

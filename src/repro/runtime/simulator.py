@@ -4,16 +4,27 @@ Reproduces the paper's two heterogeneity testbeds:
   * §III preliminary study — per-epoch idle gaps ~ Zipf(s=1.7, max 60 s)
   * §VI evaluation        — per-client speed multipliers ~ Pareto (heavy tail)
 
-plus link latencies and optional fault injection (client crash/recovery).
-Simulated seconds are the wall-clock metric of every paper-figure benchmark;
-learning itself is real (lazy local SGD at upload time), so time-to-accuracy
-curves are true learning curves under simulated cluster timing.
+plus link latencies, an optional per-client *bandwidth* model, and fault
+injection (client crash/recovery).  Simulated seconds are the wall-clock
+metric of every paper-figure benchmark; learning itself is real (lazy local
+SGD at upload time), so time-to-accuracy curves are true learning curves
+under simulated cluster timing.
 
-The server keeps model versions as flat (P,) buffers; this driver touches
-pytrees only at the dispatch boundary (``server.params_at`` unpacks lazily,
-cached per live version, so repeated uploads against one version pay the
-unpack once) and hands client results straight back to ``on_update``, which
-packs them into the (K, P) aggregation buffer.
+Uplink timing is wire-accurate: when the bandwidth model is enabled, an
+upload takes ``up_latency + wire_bytes / up_bandwidth`` where ``wire_bytes``
+is the *actual* size of the chunked transport payload the server will ingest
+(runtime/transport.py) — so compression ratio, bf16 wire format, and SEAFL²
+partial uploads all move the time-to-accuracy curves, which is the paper's
+headline metric.  Per-client bandwidths are heavy-tailed (Pareto), like the
+compute speeds: the slow-uplink tail is exactly the straggler population
+SEAFL's semi-async buffer exists for.
+
+Event flow per client: dispatch -> (down link) -> E epoch ends ->
+"upload" (training materialises, payload encoded, uplink time computed) ->
+"deliver" (server ingests the payload chunk-by-chunk into its (K, P) buffer
+slot; maybe aggregates).  With ``bandwidth_model='none'`` the deliver lands
+exactly ``up_latency`` after training ends — byte-count-independent, the
+pre-transport behaviour.
 
 On a real TPU fleet the same SeaflServer object is driven by the cohort
 scheduler in repro/launch/train.py instead of this simulator.
@@ -42,6 +53,13 @@ class SimConfig:
     zipf_max: float = 60.0             # paper §III: idle capped at 60 s
     down_latency: float = 0.1
     up_latency: float = 0.1
+    # --- bandwidth model: 'none' keeps fixed-latency links (legacy);
+    # 'pareto' draws per-client up/down rates with a heavy slow tail, and
+    # link time = latency + wire_bytes / rate.
+    bandwidth_model: str = "none"      # none | pareto
+    up_mbps: float = 20.0              # fastest-client uplink, megabits/s
+    down_mbps: float = 100.0           # fastest-client downlink, megabits/s
+    bandwidth_pareto_shape: float = 1.5
     fail_prob: float = 0.0             # per-dispatch crash probability
     recover_after: float = 30.0
     seed: int = 0
@@ -63,6 +81,7 @@ class InFlight:
     epoch_ends: list[float]
     upload_event: _Event
     n_epochs_at_upload: int
+    t0: float = 0.0               # training start (after the down link)
     notified: bool = False
 
 
@@ -80,6 +99,7 @@ class FLSimulation:
         self._heap: list[_Event] = []
         self._seq = itertools.count()
         self._inflight: dict[int, InFlight] = {}
+        self._delivering: dict[int, _Event] = {}   # cid -> pending deliver
         self.now = 0.0
         self.history: list[dict] = []
         # per-client static speed multiplier (Pareto heavy tail, paper §VI)
@@ -87,6 +107,26 @@ class FLSimulation:
             cid: float(self._rng.pareto(sim_cfg.pareto_shape) + 1.0)
             for cid in clients
         }
+        # per-client link rates in bytes/s (heavy slow tail, like the
+        # speeds).  Drawn only when the model is on, so legacy configs keep
+        # a bit-identical RNG stream.
+        self._up_bw: Optional[dict[int, float]] = None
+        self._down_bw: Optional[dict[int, float]] = None
+        if sim_cfg.bandwidth_model == "pareto":
+            shape = sim_cfg.bandwidth_pareto_shape
+            self._up_bw = {
+                cid: sim_cfg.up_mbps * 1e6 / 8.0
+                / float(self._rng.pareto(shape) + 1.0)
+                for cid in clients
+            }
+            self._down_bw = {
+                cid: sim_cfg.down_mbps * 1e6 / 8.0
+                / float(self._rng.pareto(shape) + 1.0)
+                for cid in clients
+            }
+        elif sim_cfg.bandwidth_model != "none":
+            raise ValueError(
+                f"unknown bandwidth_model {sim_cfg.bandwidth_model!r}")
 
     # ------------------------------------------------------------ timing
     def _idle_gap(self) -> float:
@@ -101,6 +141,20 @@ class FLSimulation:
         return max(1e-3, self.cfg.base_epoch_time * mult * abs(jitter)) \
             + self._idle_gap()
 
+    def _down_time(self, cid: int) -> float:
+        """Model broadcast: latency + f32 model bytes over the downlink."""
+        t = self.cfg.down_latency
+        if self._down_bw is not None:
+            t += 4.0 * self.server.packer.size / self._down_bw[cid]
+        return t
+
+    def _up_time(self, cid: int, wire_bytes: int) -> float:
+        """Upload: latency + actual transport payload bytes over the uplink."""
+        t = self.cfg.up_latency
+        if self._up_bw is not None:
+            t += wire_bytes / self._up_bw[cid]
+        return t
+
     def _push(self, time: float, kind: str, **data) -> _Event:
         ev = _Event(time, next(self._seq), kind, data)
         heapq.heappush(self._heap, ev)
@@ -109,7 +163,7 @@ class FLSimulation:
     # ---------------------------------------------------------- dispatch
     def _dispatch(self, cid: int):
         E = self.server.cfg.local_epochs
-        t0 = self.now + self.cfg.down_latency
+        t0 = self.now + self._down_time(cid)
         ends, t = [], t0
         for _ in range(E):
             t += self._epoch_time(cid)
@@ -117,10 +171,10 @@ class FLSimulation:
         if self.cfg.fail_prob > 0 and self._rng.random() < self.cfg.fail_prob:
             fail_at = t0 + self._rng.uniform(0, max(ends[-1] - t0, 1e-3))
             self._push(fail_at, "fail", cid=cid)
-        ev = self._push(ends[-1] + self.cfg.up_latency, "upload", cid=cid)
+        ev = self._push(ends[-1], "upload", cid=cid)
         self._inflight[cid] = InFlight(
             cid=cid, version=self.server.round, epoch_ends=ends,
-            upload_event=ev, n_epochs_at_upload=E)
+            upload_event=ev, n_epochs_at_upload=E, t0=t0)
 
     def _notify(self, cid: int):
         """Server NOTIFY (SEAFL², Algorithm 2): arrives after down link."""
@@ -138,11 +192,12 @@ class FLSimulation:
             return
         fl.upload_event.valid = False
         fl.n_epochs_at_upload = max(1, len(done) + 1)
-        fl.upload_event = self._push(nxt + self.cfg.up_latency, "upload",
-                                     cid=cid)
+        fl.upload_event = self._push(nxt, "upload", cid=cid)
 
     # ------------------------------------------------------------ upload
     def _handle_upload(self, cid: int):
+        """Training finished: materialise the local update, encode it for
+        the wire, and start the uplink transfer."""
         fl = self._inflight.pop(cid, None)
         if fl is None:
             return
@@ -150,8 +205,31 @@ class FLSimulation:
         client = self.clients[cid]
         w, loss = client.local_train(base, fl.n_epochs_at_upload,
                                      self.server.cfg.local_lr)
-        agg = self.server.on_update(cid, w, fl.n_epochs_at_upload,
-                                    recv_time=self.now)
+        payload = self.server.encode_update(cid, w, fl.n_epochs_at_upload)
+        up_time = self._up_time(cid, payload.nbytes)
+        self._delivering[cid] = self._push(
+            self.now + up_time, "deliver", cid=cid, payload=payload,
+            loss=loss)
+        # Under the bandwidth model slow transfers can dominate a client's
+        # lifetime, so they must be organically crashable too: the dispatch
+        # draw covered the training window at full fail_prob; allocate the
+        # transfer window a crash hazard proportional to its share of the
+        # lifetime.  (No draw with the model off — legacy RNG stream and
+        # fault behaviour stay untouched; the transfer is then just
+        # up_latency, which the legacy draw never covered either.)
+        if (self._up_bw is not None and self.cfg.fail_prob > 0
+                and up_time > 0):
+            train_time = max(self.now - fl.t0, 1e-9)
+            p_transfer = self.cfg.fail_prob * up_time / (up_time + train_time)
+            if self._rng.random() < p_transfer:
+                self._push(self.now + self._rng.uniform(0, up_time),
+                           "fail", cid=cid)
+
+    def _handle_deliver(self, cid: int, payload, loss: float):
+        """The last wire chunk landed: the server ingests the payload into
+        its (K, P) buffer slot and may aggregate."""
+        self._delivering.pop(cid, None)
+        agg = self.server.ingest_payload(payload, recv_time=self.now)
         if agg is not None:
             self._on_aggregation(agg, loss)
 
@@ -159,6 +237,7 @@ class FLSimulation:
         rec = {"time": self.now, "round": agg.round,
                "staleness_mean": float(np.mean(agg.staleness)),
                "staleness_max": float(np.max(agg.staleness)),
+               "bytes": int(self.server.bytes_uploaded),
                "loss": last_loss}
         if self.eval_fn is not None and (agg.round % self.eval_every == 0):
             rec["acc"] = float(self.eval_fn(self.server.params))
@@ -176,9 +255,11 @@ class FLSimulation:
         # a restored server may list clients as in-flight whose training died
         # with the previous process: nothing in this simulator will ever
         # upload for them (and with no idle clients the run would end
-        # immediately), so re-dispatch them on the current global.
+        # immediately), so re-dispatch them on the current global.  Clients
+        # mid-*transfer* (trained, deliver event queued) are alive — a
+        # checkpoint-chunked run() boundary must not double-dispatch them.
         for cid in sorted(self.server.active):
-            if cid not in self._inflight:
+            if cid not in self._inflight and cid not in self._delivering:
                 self.server.mark_dispatched(cid)
                 self._dispatch(cid)
         while self._heap:
@@ -194,13 +275,24 @@ class FLSimulation:
             self.now = ev.time
             if ev.kind == "upload":
                 self._handle_upload(ev.data["cid"])
+            elif ev.kind == "deliver":
+                self._handle_deliver(ev.data["cid"], ev.data["payload"],
+                                     ev.data["loss"])
             elif ev.kind == "notify":
                 self._handle_notify(ev.data["cid"])
             elif ev.kind == "fail":
                 cid = ev.data["cid"]
                 fl = self._inflight.pop(cid, None)
-                if fl is not None:
-                    fl.upload_event.valid = False
+                # a crash mid-*transfer* (after training, before the last
+                # wire chunk lands) kills the in-flight payload too — the
+                # encode-time EF residual update stands, like a real client
+                # whose send died after it updated local error memory
+                deliver = self._delivering.pop(cid, None)
+                if deliver is not None:
+                    deliver.valid = False
+                if fl is not None or deliver is not None:
+                    if fl is not None:
+                        fl.upload_event.valid = False
                     for c in self.server.mark_failed(cid):
                         self._dispatch(c)
                     self._push(self.now + self.cfg.recover_after,
@@ -218,4 +310,11 @@ class FLSimulation:
         for h in self.history:
             if h.get("acc", 0.0) >= target:
                 return h["time"]
+        return None
+
+    def bytes_to_accuracy(self, target: float) -> Optional[int]:
+        """Cumulative uplink wire bytes when ``target`` was first reached."""
+        for h in self.history:
+            if h.get("acc", 0.0) >= target:
+                return h["bytes"]
         return None

@@ -1,0 +1,329 @@
+"""Uplink transport: chunked wire format for client updates.
+
+SEAFL's premise is that the *uplink* is the scarce resource in heterogeneous
+FL, so the client->server payload is a first-class object here: a client
+update is serialised as a sequence of fixed-size chunks of the flat ``(P,)``
+``ParamPacker`` vector, and the server decodes each chunk straight into its
+``(K, P)`` buffer slot (``IngestSession``) — no host pytree staging, no
+transient delta pytree, no (P,)-sized reassembly buffer on the server.
+
+Wire schemes (``WireFormat.scheme``):
+
+  f32   — raw f32 param chunks (4 B/elem).  Bit-identical to the monolithic
+          ``ParamPacker.pack`` path; the no-compression baseline.
+  bf16  — bf16 param chunks (2 B/elem).  Halves uplink bytes at ~3 decimal
+          digits; pairs naturally with the bf16 buffer mode.
+  topk  — per-chunk top-k sparsification of the *delta* vs the dispatch
+          base (idx i32 + val f32 = 8 B per kept elem), with flat
+          error feedback preserving convergence.
+  int8  — per-chunk symmetric int8 quantisation of the delta (1 B/elem +
+          4 B scale), with flat error feedback.
+
+Delta-coded schemes (topk/int8) need the dispatch-version base on both ends;
+raw schemes (f32/bf16) are base-free, so a freshly restored server can ingest
+them without any version history.
+
+Every chunk carries ``CHUNK_HEADER_BYTES`` of framing (seq, offset, length,
+scheme tag) counted into its wire size, so the simulator's bandwidth model
+charges real bytes, not idealised payload bytes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "CHUNK_HEADER_BYTES",
+    "Chunk",
+    "WireFormat",
+    "make_wire_format",
+    "encode_flat",
+    "decode_chunk",
+    "encode_update",
+    "FlatErrorFeedback",
+    "UploadPayload",
+    "IngestSession",
+]
+
+# seq:u32 | start:u64 | length:u32  — fixed framing per chunk
+CHUNK_HEADER_BYTES = 16
+
+DEFAULT_CHUNK_ELEMS = 1 << 16
+
+
+@dataclass(frozen=True)
+class WireFormat:
+    """Static description of one uplink encoding."""
+    scheme: str = "f32"                      # f32 | bf16 | topk | int8
+    chunk_elems: int = DEFAULT_CHUNK_ELEMS   # elements per wire chunk
+    topk_ratio: float = 0.1
+
+    @property
+    def delta_coded(self) -> bool:
+        """True when the wire carries delta-vs-base (needs base + EF)."""
+        return self.scheme in ("topk", "int8")
+
+    def chunk_wire_bytes(self, n: int) -> int:
+        """Wire bytes for one n-element chunk (header included)."""
+        if self.scheme == "f32":
+            body = 4 * n
+        elif self.scheme == "bf16":
+            body = 2 * n
+        elif self.scheme == "topk":
+            body = 8 * max(1, int(n * self.topk_ratio))
+        elif self.scheme == "int8":
+            body = n + 4
+        else:                                  # pragma: no cover
+            raise ValueError(f"unknown wire scheme {self.scheme}")
+        return body + CHUNK_HEADER_BYTES
+
+    def payload_bytes(self, p: int) -> int:
+        """Total wire bytes for a (p,)-element update under this format."""
+        total, off = 0, 0
+        while off < p:
+            n = min(self.chunk_elems, p - off)
+            total += self.chunk_wire_bytes(n)
+            off += n
+        return total
+
+
+def make_wire_format(spec: Optional[str],
+                     chunk_elems: int = DEFAULT_CHUNK_ELEMS) -> WireFormat:
+    """spec: None | 'f32' | 'bf16' | 'topk:<ratio>' | 'int8'.
+
+    ``None`` means uncompressed — raw f32 chunks (the payload still has a
+    real wire size, which is the whole point of the bandwidth model).
+    """
+    if spec is None or spec in ("none", "f32"):
+        return WireFormat("f32", chunk_elems)
+    if spec == "bf16":
+        return WireFormat("bf16", chunk_elems)
+    if spec.startswith("topk"):
+        ratio = float(spec.split(":")[1]) if ":" in spec else 0.1
+        if not 0.0 < ratio <= 1.0:
+            raise ValueError(f"topk ratio must be in (0, 1], got {ratio}")
+        return WireFormat("topk", chunk_elems, topk_ratio=ratio)
+    if spec == "int8":
+        return WireFormat("int8", chunk_elems)
+    raise ValueError(f"unknown wire format spec {spec!r}")
+
+
+@dataclass
+class Chunk:
+    """One wire chunk: a contiguous [start, start+length) window of the
+    flat (P,) vector, encoded per the session's WireFormat."""
+    seq: int
+    start: int
+    length: int
+    payload: Any                 # scheme-specific device array(s)
+    nbytes: int                  # wire size incl. CHUNK_HEADER_BYTES
+
+
+# --------------------------------------------------------------- encoders
+# jit'd per (scheme, chunk length); at most two lengths occur per P (full
+# chunks + one tail), so compile count stays tiny.
+
+@jax.jit
+def _enc_bf16(x):
+    return x.astype(jnp.bfloat16)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _enc_topk(x, k):
+    xf = x.astype(jnp.float32)
+    _, idx = jax.lax.top_k(jnp.abs(xf), k)
+    return {"idx": idx.astype(jnp.int32), "val": xf[idx]}
+
+
+@jax.jit
+def _enc_int8(x):
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _dec_topk(idx, val, n):
+    return jnp.zeros((n,), jnp.float32).at[idx].set(val)
+
+
+@jax.jit
+def _dec_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def encode_chunk(x: jnp.ndarray, seq: int, start: int,
+                 fmt: WireFormat) -> Chunk:
+    """Encode one (n,) f32 window of the flat vector."""
+    n = int(x.shape[0])
+    if fmt.scheme == "f32":
+        payload = x                                   # bit-exact passthrough
+    elif fmt.scheme == "bf16":
+        payload = _enc_bf16(x)
+    elif fmt.scheme == "topk":
+        payload = _enc_topk(x, max(1, int(n * fmt.topk_ratio)))
+    elif fmt.scheme == "int8":
+        payload = _enc_int8(x)
+    else:                                             # pragma: no cover
+        raise ValueError(f"unknown wire scheme {fmt.scheme}")
+    return Chunk(seq=seq, start=start, length=n, payload=payload,
+                 nbytes=fmt.chunk_wire_bytes(n))
+
+
+def decode_chunk(chunk: Chunk, fmt: WireFormat) -> jnp.ndarray:
+    """Decode one chunk back to its (length,) f32 window."""
+    if fmt.scheme == "f32":
+        return chunk.payload
+    if fmt.scheme == "bf16":
+        return chunk.payload.astype(jnp.float32)
+    if fmt.scheme == "topk":
+        return _dec_topk(chunk.payload["idx"], chunk.payload["val"],
+                         chunk.length)
+    if fmt.scheme == "int8":
+        return _dec_int8(chunk.payload["q"], chunk.payload["scale"])
+    raise ValueError(f"unknown wire scheme {fmt.scheme}")     # pragma: no cover
+
+
+def encode_flat(vec: jnp.ndarray, fmt: WireFormat) -> list[Chunk]:
+    """Split a flat (P,) vector into encoded wire chunks."""
+    p = int(vec.shape[0])
+    chunks, off, seq = [], 0, 0
+    while off < p:
+        n = min(fmt.chunk_elems, p - off)
+        chunks.append(encode_chunk(jax.lax.slice(vec, (off,), (off + n,)),
+                                   seq, off, fmt))
+        off += n
+        seq += 1
+    if not chunks:             # zero-parameter model: one empty sentinel
+        chunks.append(Chunk(0, 0, 0, jnp.zeros((0,), jnp.float32),
+                            CHUNK_HEADER_BYTES))
+    return chunks
+
+
+# --------------------------------------------------------------- client side
+
+class FlatErrorFeedback:
+    """Per-client error feedback on the flat (P,) delta.
+
+    The residual the lossy wire dropped last round is added to this round's
+    delta before encoding, preserving convergence of compressed uploads
+    (same contract as the per-leaf pytree ErrorFeedback it replaces — but
+    one (P,) array instead of a delta-shaped pytree).
+    """
+
+    def __init__(self, residual: Optional[jnp.ndarray] = None):
+        self.residual = residual
+
+    def carry_in(self, delta: jnp.ndarray) -> jnp.ndarray:
+        if self.residual is None:
+            return delta
+        return delta + self.residual
+
+    def carry_out(self, sent: jnp.ndarray, decoded: jnp.ndarray) -> None:
+        """sent = delta + old residual; decoded = what the wire delivered."""
+        self.residual = sent - decoded
+
+
+@dataclass
+class UploadPayload:
+    """One client upload as it travels on the wire."""
+    cid: int
+    version: int                 # t_k: round the client trained from
+    n_epochs: int
+    scheme: str
+    param_size: int
+    chunks: list[Chunk] = field(default_factory=list)
+    nbytes: int = 0              # total wire bytes (headers included)
+
+
+def encode_update(cid: int, version: int, n_epochs: int,
+                  flat_params: jnp.ndarray, fmt: WireFormat,
+                  base_flat: Optional[jnp.ndarray] = None,
+                  ef: Optional[FlatErrorFeedback] = None) -> UploadPayload:
+    """Client-side encoder: flat params -> wire payload.
+
+    Raw schemes (f32/bf16) ship the params themselves.  Delta-coded schemes
+    (topk/int8) ship delta = params - base (+ EF residual); ``base_flat`` is
+    required and ``ef`` (if given) is updated in place with the new residual.
+    """
+    if fmt.delta_coded:
+        if base_flat is None:
+            raise ValueError(f"wire scheme {fmt.scheme} is delta-coded and "
+                             "needs the dispatch-version base")
+        vec = flat_params - base_flat
+        if ef is not None:
+            vec = ef.carry_in(vec)
+    else:
+        vec = flat_params
+    chunks = encode_flat(vec, fmt)
+    if fmt.delta_coded and ef is not None:
+        decoded = jnp.concatenate(
+            [decode_chunk(c, fmt) for c in chunks]) if int(vec.shape[0]) \
+            else jnp.zeros((0,), jnp.float32)
+        ef.carry_out(vec, decoded)
+    return UploadPayload(
+        cid=cid, version=version, n_epochs=n_epochs, scheme=fmt.scheme,
+        param_size=int(flat_params.shape[0]), chunks=chunks,
+        nbytes=sum(c.nbytes for c in chunks))
+
+
+# --------------------------------------------------------------- server side
+
+class IngestSession:
+    """Server-side decoder for one in-flight upload.
+
+    Each wire chunk is decoded and written straight into the reserved
+    ``(K, P)`` buffer slot with a donated dynamic-update — the server never
+    stages the update as a host pytree or a transient (P,) staging vector.
+    Chunks must arrive in order (start == bytes ingested so far), which the
+    sequential wire framing guarantees.
+    """
+
+    def __init__(self, buffer, slot: int, fmt: WireFormat,
+                 base_flat: Optional[jnp.ndarray] = None,
+                 param_size: Optional[int] = None):
+        if fmt.delta_coded and base_flat is None:
+            raise ValueError(f"wire scheme {fmt.scheme} is delta-coded and "
+                             "needs the dispatch-version base to decode")
+        self.buffer = buffer
+        self.slot = int(slot)
+        self.fmt = fmt
+        self.base = base_flat
+        self.param_size = int(param_size if param_size is not None
+                              else buffer.param_size)
+        self.covered = 0             # elements ingested so far (in order)
+        self.nbytes = 0              # wire bytes seen
+
+    def write(self, chunk: Chunk) -> None:
+        if chunk.start != self.covered:
+            raise ValueError(
+                f"out-of-order chunk: start={chunk.start}, "
+                f"expected {self.covered}")
+        if chunk.start + chunk.length > self.param_size:
+            raise ValueError("chunk overruns the parameter vector")
+        vals = decode_chunk(chunk, self.fmt)
+        if self.fmt.delta_coded:
+            vals = vals + jax.lax.slice(
+                self.base, (chunk.start,), (chunk.start + chunk.length,))
+        if chunk.length:
+            self.buffer.write_range(self.slot, chunk.start, vals)
+        self.covered += chunk.length
+        self.nbytes += chunk.nbytes
+
+    @property
+    def complete(self) -> bool:
+        return self.covered == self.param_size
+
+    def finish(self) -> int:
+        """Validate full coverage; returns total wire bytes ingested."""
+        if not self.complete:
+            raise ValueError(
+                f"incomplete upload: {self.covered}/{self.param_size} "
+                "elements ingested")
+        return self.nbytes

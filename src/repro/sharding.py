@@ -31,6 +31,7 @@ __all__ = [
     "constrain",
     "param_pspecs",
     "named_sharding",
+    "shard_update_buffer",
     "DEFAULT_RULES",
 ]
 
@@ -240,3 +241,29 @@ def named_sharding(mesh: Mesh, spec_tree):
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+def shard_update_buffer(buf):
+    """Place a (K, P) SEAFL update buffer per DEFAULT_RULES['buffer'].
+
+    The leading slot axis shards over the 'pod' mesh axis when one is active
+    (updates stay resident on the pod that produced them; Eq. (5)/(7) become
+    a sharded reduction over K).  Off-mesh, or when K does not divide the pod
+    axis size, the buffer is left as-is (replicated) — single-device tests
+    and CPU benches hit this path.
+    """
+    rules = current_rules()
+    if rules.mesh is None:
+        return buf
+    resolved = rules.resolve("buffer")
+    if resolved is None:
+        return buf
+    axes = (resolved,) if isinstance(resolved, str) else tuple(resolved)
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+    total = 1
+    for a in axes:
+        total *= sizes.get(a, 1)
+    if total <= 1 or buf.shape[0] % total != 0:
+        return buf
+    return jax.device_put(
+        buf, NamedSharding(rules.mesh, P(resolved, None)))
