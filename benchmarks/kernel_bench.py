@@ -19,6 +19,8 @@ import numpy as np
 
 BENCH_INGEST_JSON = os.path.join(os.path.dirname(__file__),
                                  "BENCH_ingest.json")
+BENCH_DISPATCH_JSON = os.path.join(os.path.dirname(__file__),
+                                   "BENCH_dispatch.json")
 
 
 def _time(fn, *args, reps=5):
@@ -223,28 +225,36 @@ def bench_ingest():
                     for i in range(K)]
         jax.block_until_ready([c.payload for c in payloads[0].chunks])
 
-        def ingest_all():
+        def ingest_all(coalesced=False):
             buf = UpdateBuffer(K, P)
             for i, pl in enumerate(payloads):
                 slot = buf.reserve(Update(i, 1, 0, 1))
                 sess = IngestSession(
                     buf, slot, fmt,
                     base_flat=base if fmt.delta_coded else None)
-                for c in pl.chunks:
-                    sess.write(c)
+                if coalesced:
+                    sess.write_all(pl.chunks)
+                else:
+                    for c in pl.chunks:
+                        sess.write(c)
                 sess.finish()
                 buf.commit(slot)
             return buf
 
-        ingest_all()                       # warm the chunk-write jits
-        t0 = time.perf_counter()
-        jax.block_until_ready(ingest_all().stacked_flat())
-        dt = time.perf_counter() - t0
+        def timed(coalesced):
+            ingest_all(coalesced)          # warm the chunk-write jits
+            t0 = time.perf_counter()
+            jax.block_until_ready(ingest_all(coalesced).stacked_flat())
+            return time.perf_counter() - t0
+
+        dt, dt_co = timed(False), timed(True)
         wire = sum(pl.nbytes for pl in payloads)
         decoded_mb = K * P * 4 / 2**20     # f32 params landed in the buffer
         ratio = (K * P * 4) / wire
-        rows.append((f"ingest/{spec}", f"{decoded_mb / dt:.0f}",
-                     f"MBps_chunked_decode_write;wire_bytes={wire};"
+        rows.append((f"ingest/{spec}", f"{decoded_mb / dt_co:.0f}",
+                     f"MBps_coalesced_decode_write;per_chunk="
+                     f"{decoded_mb / dt:.0f}MBps"
+                     f"({dt / dt_co:.2f}x);wire_bytes={wire};"
                      f"compression={ratio:.2f}x;chunks_per_upload="
                      f"{len(payloads[0].chunks)}"))
         report["schemes"][spec] = {
@@ -252,6 +262,8 @@ def bench_ingest():
             "wire_bytes_per_update": int(wire // K),
             "compression_vs_f32_params": round(ratio, 3),
             "ingest_MBps": round(decoded_mb / dt, 1),
+            "ingest_MBps_coalesced": round(decoded_mb / dt_co, 1),
+            "coalesce_speedup": round(dt / dt_co, 2),
         }
 
     # bf16 buffer mode: HBM halves, aggregation parity stays <= 1e-2
@@ -280,5 +292,89 @@ def bench_ingest():
     return rows
 
 
+def bench_dispatch():
+    """Downlink dispatch: wire bytes per scheme (full snapshot vs delta),
+    delta-hit rate vs history-ring depth, and decode+apply throughput.
+
+    Emits BENCH_dispatch.json next to BENCH_ingest.json so the downlink
+    half of the bidirectional wire is tracked from PR to PR.
+    """
+    from repro.runtime.dispatch import DispatchSession, apply_dispatch
+    from repro.runtime.transport import make_wire_format
+
+    rows = []
+    P = 1_000_000
+    rng = np.random.default_rng(0)
+    g0 = jnp.asarray(rng.normal(size=P).astype(np.float32))
+    # a plausible round-over-round drift: aggregation moves ~1% of the norm
+    ring = {0: g0}
+    for v in range(1, 4):
+        ring[v] = ring[v - 1] + 0.01 * jnp.asarray(
+            rng.normal(size=P).astype(np.float32))
+    report: dict = {"P": P, "schemes": {}, "delta_hit_rate": {}}
+
+    for spec in ["f32", "bf16", "topk:0.1", "int8"]:
+        sess = DispatchSession(make_wire_format(spec, 1 << 16), history=4)
+        full = sess.encode(0, 2, ring)              # no held version yet
+        sess.deliver(full)
+        held = apply_dispatch(full, sess.fmt)       # client now holds v2
+        delta = sess.encode(0, 3, ring)             # returning client, lag 1
+        # decode+apply throughput of the dominant (delta when available) path
+        pay = delta if not delta.full else full
+        base = held if not delta.full else None
+        apply_dispatch(pay, sess.fmt, base)         # warm decode jits
+        t0 = time.perf_counter()
+        jax.block_until_ready(apply_dispatch(pay, sess.fmt, base))
+        dt = time.perf_counter() - t0
+        mb = P * 4 / 2**20
+        rows.append((f"dispatch/{spec}", f"{mb / dt:.0f}",
+                     f"MBps_decode_apply;full_bytes={full.nbytes};"
+                     f"delta_bytes={delta.nbytes if not delta.full else 'n/a'};"
+                     f"wire_saving={4 * P / delta.nbytes:.2f}x_vs_f32_model"))
+        report["schemes"][spec] = {
+            "full_snapshot_bytes": int(full.nbytes),
+            "delta_bytes": int(delta.nbytes) if not delta.full else None,
+            "delta_compression_vs_f32_model":
+                round(4 * P / delta.nbytes, 3) if not delta.full else None,
+            "apply_MBps": round(mb / dt, 1),
+        }
+
+    # delta-hit rate vs ring depth: a real (tiny) fleet under the simulator —
+    # deeper rings let stale returning clients still receive deltas
+    from repro.core.server import FLConfig
+    from repro.experiment import ExperimentConfig, run_experiment
+    from repro.runtime.simulator import SimConfig
+    for depth in [1, 2, 8]:
+        fl = FLConfig(algorithm="seafl", n_clients=10, concurrency=5,
+                      buffer_size=2, staleness_limit=6, local_epochs=2,
+                      local_lr=0.05, batch_size=16, seed=7,
+                      dispatch_compression="topk:0.1",
+                      dispatch_history=depth)
+        cfg = ExperimentConfig(
+            dataset="tiny", n_train=300, n_test=60, model="mlp", fl=fl,
+            sim=SimConfig(speed_model="pareto", seed=7,
+                          bandwidth_model="pareto", up_mbps=5.0,
+                          down_mbps=0.5),
+            seed=7)
+        sim, _ = run_experiment(cfg, max_rounds=8)
+        d = sim.server.dispatch
+        total = d.full_dispatches + d.delta_dispatches
+        hit = d.delta_dispatches / max(total, 1)
+        rows.append((f"dispatch/hit_rate_depth{depth}", f"{hit:.2f}",
+                     f"delta={d.delta_dispatches};full={d.full_dispatches};"
+                     f"down_bytes={sim.server.bytes_downloaded}"))
+        report["delta_hit_rate"][str(depth)] = {
+            "rate": round(hit, 3),
+            "delta": int(d.delta_dispatches),
+            "full": int(d.full_dispatches),
+            "bytes_downloaded": int(sim.server.bytes_downloaded),
+        }
+
+    with open(BENCH_DISPATCH_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(("dispatch/report", "1", f"json={BENCH_DISPATCH_JSON}"))
+    return rows
+
+
 ALL_KERNEL_BENCHES = [bench_agg, bench_flat_vs_pytree, bench_attention,
-                      bench_scan_kernels, bench_ingest]
+                      bench_scan_kernels, bench_ingest, bench_dispatch]

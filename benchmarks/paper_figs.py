@@ -129,22 +129,32 @@ def fig6_partial_training():
 
 
 def fig7_bytes_vs_accuracy():
-    """Fig. 7 (new axis) — uplink wire format under the bandwidth model:
-    simulated time-to-target and uplink bytes-to-target per scheme.  With
-    per-client Pareto bandwidths the upload time is computed from the actual
-    chunked-transport payload, so compression moves the wall-clock curve,
-    not just a bytes column."""
+    """Fig. 7 (new axis) — wire formats under the bandwidth model, both
+    directions: simulated time-to-target and bytes-to-target per scheme.
+    With per-client Pareto bandwidths the upload time is computed from the
+    actual chunked-transport payload and the dispatch time from the actual
+    (possibly delta-coded) downlink payload, so compression moves the
+    wall-clock curve, not just a bytes column.  ``bytes_to_target`` sums
+    both directions — the uplink-only number under-reports real traffic by
+    the full broadcast volume."""
     rows = []
-    for spec, tag in [(None, "f32"), ("bf16", "bf16"),
-                      ("topk:0.1", "topk0.1"), ("int8", "int8")]:
-        fl = base_fl("seafl", compression=spec)
+    for up_spec, down_spec, tag in [
+            (None, None, "f32"), ("bf16", None, "bf16"),
+            ("topk:0.1", None, "topk0.1"), ("int8", None, "int8"),
+            ("topk:0.1", "topk:0.1", "topk0.1-bidir")]:
+        fl = base_fl("seafl", compression=up_spec,
+                     dispatch_compression=down_spec)
         cfg = base_exp(fl, speed="pareto", bandwidth_model="pareto",
                        up_mbps=2.0, down_mbps=50.0)
         res = run(cfg, target=TARGET, max_rounds=120)
-        bta = res["sim"].bytes_to_accuracy(TARGET)
+        sim = res["sim"]
+        bta = sim.bytes_to_accuracy(TARGET, direction="total")
+        bta_up = sim.bytes_to_accuracy(TARGET, direction="up")
+        last = res["hist"][-1]
         rows.append((f"fig7/{tag}", f"{_tta(res):.1f}",
                      f"bytes_to_target={bta if bta is not None else 'inf'};"
-                     f"total_bytes={res['hist'][-1]['bytes']};"
+                     f"uplink_only={bta_up if bta_up is not None else 'inf'};"
+                     f"total_bytes={last['bytes'] + last['bytes_down']};"
                      f"best_acc={res['best_acc']:.3f}"))
     return rows
 

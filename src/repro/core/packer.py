@@ -62,6 +62,11 @@ class ParamPacker:
         return jax.tree.unflatten(self._treedef, out)
 
     # ------------------------------------------------------------------- api
+    def zeros(self) -> jnp.ndarray:
+        """A fresh flat (P,) f32 buffer in this layout (the downlink
+        receiver's bootstrap state before its first full snapshot)."""
+        return jnp.zeros((self.size,), jnp.float32)
+
     def pack(self, tree: PyTree) -> jnp.ndarray:
         """Flatten ``tree`` into a (P,) f32 buffer (layout checked)."""
         if jax.tree.structure(tree) != self._treedef:

@@ -27,7 +27,7 @@ accumulate in f32 regardless.
 from __future__ import annotations
 
 import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as dc_replace
 from typing import Any, Optional
 
 import jax
@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core.aggregation import SeaflHyper
 from repro.core.buffer import Update, UpdateBuffer
+from repro.runtime.dispatch import DispatchPayload, DispatchSession
 from repro.runtime.transport import (
     Chunk, FlatErrorFeedback, IngestSession, UploadPayload,
     encode_update as transport_encode_update, make_wire_format,
@@ -72,6 +73,13 @@ class FLConfig:
     compression: Optional[str] = None
     chunk_elems: int = 1 << 16       # wire chunk granularity (elements)
     buffer_dtype: str = "float32"    # 'float32' | 'bfloat16' slot storage
+    # downlink wire format: None keeps the legacy whole-model broadcast
+    # (no wire object; the bandwidth model charges raw f32 model bytes);
+    # 'f32' | 'bf16' | 'topk:<ratio>' | 'int8' serve chunked dispatch
+    # payloads with per-client version tracking (runtime/dispatch.py)
+    dispatch_compression: Optional[str] = None
+    dispatch_history: int = 8        # global-history ring depth (versions)
+    dispatch_chunk_elems: int = 1 << 16   # downlink chunk granularity
     seed: int = 0
 
     def hyper(self) -> SeaflHyper:
@@ -105,6 +113,12 @@ class SeaflServer:
         self._flat = self.packer.pack(params)          # current global, (P,)
         self.round = 0
         self.wire = make_wire_format(cfg.compression, cfg.chunk_elems)
+        self.dispatch: Optional[DispatchSession] = None
+        if cfg.dispatch_compression is not None:
+            self.dispatch = DispatchSession(
+                make_wire_format(cfg.dispatch_compression,
+                                 cfg.dispatch_chunk_elems),
+                cfg.dispatch_history)
         self._buffer_dtype = BUFFER_DTYPES[cfg.buffer_dtype]
         self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size,
                                    dtype=self._buffer_dtype)
@@ -116,7 +130,8 @@ class SeaflServer:
         self._notified: set[int] = set()
         self._rng = np.random.default_rng(cfg.seed)
         self.total_aggregations = 0
-        self.bytes_uploaded = 0                  # wire bytes, every scheme
+        self.bytes_uploaded = 0                  # uplink wire bytes
+        self.bytes_downloaded = 0                # downlink wire bytes
         self._ef: dict[int, FlatErrorFeedback] = {}
         self._ingests: dict[int, IngestSession] = {}   # cid -> mid-stream
 
@@ -151,6 +166,13 @@ class SeaflServer:
 
     def _gc_history(self):
         live = set(self.active.values()) | {self.round}
+        if self.dispatch is not None and self.dispatch.fmt.delta_coded:
+            # the bounded dispatch ring: keep the last `dispatch_history`
+            # globals so returning clients can receive deltas against the
+            # version they still hold (older holders get a full snapshot).
+            # Raw dispatch schemes (f32/bf16) never read old ring versions,
+            # so they pay no retention.
+            live |= self.dispatch.ring_versions(self.round)
         self._history = {v: p for v, p in self._history.items() if v in live}
         self._unpack_cache = {v: p for v, p in self._unpack_cache.items()
                               if v in live}
@@ -181,6 +203,10 @@ class SeaflServer:
         """Client died mid-training: return a replacement dispatch if any."""
         self.active.pop(cid, None)
         self.abort_ingest(cid)           # a mid-stream upload dies with it
+        if self.dispatch is not None:
+            # the device lost its model state: version tracking is void and
+            # its next dispatch re-requests a full snapshot
+            self.dispatch.drop(cid)
         # the dead client may rejoin the idle pool later (recovery)
         repl = self._sample_idle(1)
         for c in repl:
@@ -213,6 +239,47 @@ class SeaflServer:
         self._notified.update(out)
         return out
 
+    # ----------------------------------------------------- downlink transport
+    def encode_dispatch(self, cid: int,
+                        materialize: bool = True) -> DispatchPayload:
+        """Serve the current global to ``cid``.
+
+        Legacy mode (``dispatch_compression=None``): no wire object — a
+        marker payload whose ``nbytes`` is the raw f32 model size, exactly
+        what the pre-dispatch bandwidth model charged.  Otherwise the
+        DispatchSession encodes chunked f32/bf16 snapshots or topk/int8
+        deltas against the client's held ring version
+        (``materialize=False`` skips building raw/full chunks whose bytes
+        have a closed form — the simulator's hot path).  Tracking state is
+        untouched until :meth:`deliver_dispatch` — an undelivered payload
+        (crash inside the dispatch window) simply dies on the wire."""
+        target = self.active.get(cid, self.round)
+        if self.dispatch is None:
+            return DispatchPayload(
+                cid=cid, target_version=target, base_version=None,
+                scheme="raw", param_size=self.packer.size, chunks=None,
+                nbytes=4 * self.packer.size)
+        return self.dispatch.encode(cid, target, self._history,
+                                    materialize=materialize)
+
+    def deliver_dispatch(self, cid: int, payload: DispatchPayload) -> None:
+        """The last downlink chunk reached the client: account the wire
+        bytes and commit version tracking + error-feedback residual."""
+        self.bytes_downloaded += payload.nbytes
+        if self.dispatch is not None and payload.scheme != "raw":
+            self.dispatch.deliver(payload)
+
+    def dispatch_model(self, cid: int) -> PyTree:
+        """The model ``cid`` actually holds (training-base boundary): the
+        exact dispatch-version global in legacy/f32 mode, the delivered
+        reconstruction under lossy dispatch.  Unpacked once, here."""
+        if self.dispatch is None or cid not in self.dispatch.versions:
+            return self.params_at(self.active[cid])
+        held = self.dispatch.held_flat(cid, self._history)
+        if held is self._history.get(self.dispatch.versions[cid]):
+            return self.params_at(self.dispatch.versions[cid])   # f32: cached
+        return self.packer.unpack(held)
+
     # ------------------------------------------------------- uplink transport
     def encode_update(self, cid: int, client_params: PyTree,
                       n_epochs: int) -> UploadPayload:
@@ -223,12 +290,21 @@ class SeaflServer:
         and updated — per-leaf delta pytrees are never built."""
         version = self.active[cid]
         flat = self.packer.pack(client_params)
+        wire = self.wire
+        if wire.scheme == "topk" and n_epochs < self.cfg.local_epochs:
+            # SEAFL² byte coupling: a notified partial-training client did
+            # n' < E epochs of work, so its update carries proportionally
+            # less signal — ship proportionally fewer bytes.  (Decode is
+            # ratio-free: topk chunks carry their own indices.)
+            wire = dc_replace(
+                wire, topk_ratio=wire.topk_ratio
+                * max(1, n_epochs) / self.cfg.local_epochs)
         base = ef = None
-        if self.wire.delta_coded:
+        if wire.delta_coded:
             base = self._history[version]
             ef = self._ef.setdefault(cid, FlatErrorFeedback())
         return transport_encode_update(cid, version, n_epochs, flat,
-                                       self.wire, base, ef)
+                                       wire, base, ef)
 
     def begin_ingest(self, cid: int, version: int, n_epochs: int,
                      recv_time: float = 0.0) -> IngestSession:
@@ -279,11 +355,13 @@ class SeaflServer:
     def ingest_payload(self, payload: UploadPayload,
                        recv_time: float = 0.0) -> Optional[AggregationEvent]:
         """Atomic ingest of a whole wire payload (the simulator's deliver
-        event and the legacy ``on_update`` both land here)."""
-        self.begin_ingest(payload.cid, payload.version, payload.n_epochs,
-                          recv_time=recv_time)
-        for chunk in payload.chunks:
-            self.ingest_chunk(payload.cid, chunk)
+        event and the legacy ``on_update`` both land here).  The drained
+        chunks are adjacent windows of one slot, so they coalesce into a
+        single donated dynamic-update (``IngestSession.write_all``) instead
+        of one dispatch per chunk."""
+        sess = self.begin_ingest(payload.cid, payload.version,
+                                 payload.n_epochs, recv_time=recv_time)
+        sess.write_all(payload.chunks)
         return self.finish_ingest(payload.cid, recv_time)
 
     # ----------------------------------------------------------- on_update
@@ -384,6 +462,9 @@ class SeaflServer:
             "notified": sorted(self._notified),
             "total_aggregations": self.total_aggregations,
             "bytes_uploaded": int(self.bytes_uploaded),
+            "bytes_downloaded": int(self.bytes_downloaded),
+            "dispatch": (self.dispatch.state_dict()
+                         if self.dispatch is not None else None),
             "rng": self._rng.bit_generator.state,
             "history_versions": sorted(self._history),
             "buffer": [
@@ -406,6 +487,8 @@ class SeaflServer:
         for cid, ef in self._ef.items():
             if ef.residual is not None:
                 trees[f"ef{cid}"] = ef.residual
+        if self.dispatch is not None:
+            trees.update(self.dispatch.residual_trees())
         for i in range(len(self.buffer)):
             trees[f"slot{i}"] = self.buffer.row(i)
         return trees
@@ -417,6 +500,24 @@ class SeaflServer:
         self._notified = set(state["notified"])
         self.total_aggregations = int(state["total_aggregations"])
         self.bytes_uploaded = int(state.get("bytes_uploaded", 0))
+        self.bytes_downloaded = int(state.get("bytes_downloaded", 0))
+        disp_state = state.get("dispatch")
+        disp_trees = {k: v for k, v in trees.items() if k.startswith("dr")}
+        if disp_state is not None and self.dispatch is None:
+            warnings.warn(
+                "checkpoint carries dispatch version-tracking state but the "
+                "restored config has dispatch_compression=None; dropping it "
+                "(all clients will receive full legacy broadcasts)")
+        elif self.dispatch is not None:
+            if disp_state is not None and \
+                    disp_state.get("scheme") != self.dispatch.fmt.scheme:
+                warnings.warn(
+                    f"checkpoint dispatch state was written under scheme "
+                    f"'{disp_state.get('scheme')}' but the restored config "
+                    f"uses '{self.dispatch.fmt.scheme}'; dropping tracking "
+                    f"state (clients re-request full snapshots)")
+                disp_state, disp_trees = None, {}
+            self.dispatch.load_state(disp_state or {}, disp_trees)
         self._rng = np.random.default_rng()
         self._rng.bit_generator.state = state["rng"]
         self._history = {int(k[1:]): jnp.asarray(v)

@@ -38,7 +38,8 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                 staleness_limit: float = 5.0, algorithm: str = "seafl",
                 seq_len: int = 64, batch_size: int = 4,
                 shard_seqs: int = 24, local_epochs: int = 2,
-                lr: float = 0.02, seed: int = 0, compression=None):
+                lr: float = 0.02, seed: int = 0, compression=None,
+                dispatch_compression=None, dispatch_history: int = 8):
     cfg = smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg)
     params0 = model.init(jax.random.PRNGKey(seed))
@@ -76,7 +77,9 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                   concurrency=concurrency, buffer_size=buffer_size,
                   staleness_limit=staleness_limit, local_epochs=local_epochs,
                   local_lr=lr, batch_size=batch_size, seed=seed,
-                  compression=compression)
+                  compression=compression,
+                  dispatch_compression=dispatch_compression,
+                  dispatch_history=dispatch_history)
     server = SeaflServer(fl, params0, {c.cid: c.n_samples
                                        for c in clients.values()})
 
@@ -108,6 +111,10 @@ def main():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--compression", default=None)
+    ap.add_argument("--dispatch-compression", default=None,
+                    help="downlink wire: f32 | bf16 | topk:<r> | int8 "
+                         "(default: legacy whole-model broadcast)")
+    ap.add_argument("--dispatch-history", type=int, default=8)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
@@ -118,7 +125,9 @@ def main():
         concurrency=args.concurrency, buffer_size=args.buffer,
         staleness_limit=args.beta, algorithm=args.algorithm,
         seq_len=args.seq_len, lr=args.lr, seed=args.seed,
-        compression=args.compression)
+        compression=args.compression,
+        dispatch_compression=args.dispatch_compression,
+        dispatch_history=args.dispatch_history)
 
     ck = None
     if args.ckpt_dir:
@@ -151,9 +160,14 @@ def main():
             break
     if ck is not None:
         ck.wait()   # the last async save must land before the process exits
+    disp = server.dispatch
+    disp_note = "" if disp is None else (
+        f", dispatch_full={disp.full_dispatches}"
+        f", dispatch_delta={disp.delta_dispatches}")
     print(f"[train] done: {server.round} rounds, "
           f"{server.total_aggregations} aggregations, "
-          f"uplink_bytes={server.bytes_uploaded}")
+          f"uplink_bytes={server.bytes_uploaded}, "
+          f"downlink_bytes={server.bytes_downloaded}{disp_note}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,246 @@
+"""Downlink dispatch: version-tracked, delta-coded model broadcast.
+
+The uplink transport (runtime/transport.py) made client->server payloads a
+first-class wire object; this module is its mirror for the server->client
+direction.  A :class:`DispatchSession` tracks, per client, the last global
+version the client fully received, and serves each dispatch as chunked
+payloads over the same wire format:
+
+  f32   — raw f32 chunks of the current global.  Bit-identical to the
+          legacy broadcast path (the client ends up holding exactly the
+          server's (P,) global); the no-compression baseline.
+  bf16  — raw bf16 chunks of the current global (2 B/elem): every dispatch
+          is a fresh, base-free half-size snapshot.
+  topk  — per-chunk top-k of the *delta* ``global - ring[held_version]``
+          (8 B per kept elem), with server-side error feedback so the
+          client's reconstruction tracks the global across rounds.
+  int8  — per-chunk symmetric int8 quantisation of the same delta.
+
+Delta-coded schemes need a shared base: the server keeps a bounded ring of
+flat (P,) global-history buffers (``FLConfig.dispatch_history`` versions,
+retained through ``SeaflServer._history``).  A returning client whose held
+version is still in the ring receives a delta; a fresh client, a crashed
+client, or one whose version aged out of the ring receives a **full
+snapshot** as raw f32 chunks (exact, and it resets the error-feedback
+residual).
+
+Error feedback makes lossy deltas convergent: the server models the client's
+held state as ``ring[held] - residual`` (what the wire dropped so far), folds
+the residual into the next delta, and updates it from what the wire actually
+delivered — the same :class:`~repro.runtime.transport.FlatErrorFeedback`
+algebra as the uplink, run on the server because in this direction the
+server is the encoder.  The residual commits only at *delivery*
+(``deliver``): a payload that dies on the wire (client crash inside the
+dispatch window) leaves no trace, the client's tracking state is dropped,
+and its next dispatch is a full snapshot — the re-request path.
+
+Everything here is flat-space: deltas, reconstruction, and the held-state
+algebra all operate on the packed (P,) vector; ``ParamPacker.unpack`` runs
+once, at the training boundary.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.transport import (
+    CHUNK_HEADER_BYTES, Chunk, WireFormat, decode_concat, encode_flat,
+)
+
+__all__ = [
+    "DispatchPayload",
+    "DispatchSession",
+    "apply_dispatch",
+]
+
+
+@dataclass
+class DispatchPayload:
+    """One server->client model transfer as it travels on the wire.
+
+    ``base_version is None`` marks a full snapshot (raw chunks of the
+    global); otherwise the chunks carry a delta against that ring version.
+    ``scheme == 'raw'`` is the legacy broadcast marker: no wire object at
+    all, just the f32 model size for the bandwidth model (the
+    ``dispatch_compression=None`` path, byte- and bit-identical to the
+    pre-dispatch-subsystem behaviour).  ``chunks is None`` on a non-legacy
+    payload means the encoder skipped materialisation
+    (``DispatchSession.encode(materialize=False)``): the content is exactly
+    a ring entry, only ``nbytes`` is meaningful.
+
+    ``residual`` is server-side bookkeeping, not wire payload: the error-
+    feedback carry that becomes the client's tracked residual if — and only
+    if — the payload is delivered.
+    """
+    cid: int
+    target_version: int
+    base_version: Optional[int]
+    scheme: str
+    param_size: int
+    chunks: Optional[list[Chunk]]
+    nbytes: int
+    residual: Optional[jnp.ndarray] = None
+
+    @property
+    def full(self) -> bool:
+        return self.base_version is None
+
+
+def apply_dispatch(payload: DispatchPayload, fmt: WireFormat,
+                   held_flat: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Client-side reconstruction, literally from the wire chunks.
+
+    Full payloads overwrite; delta payloads add onto ``held_flat`` (the flat
+    model the client kept from its last dispatch).  Returns the client's new
+    flat (P,) model — unpack it once via ``ParamPacker`` for local training.
+    """
+    if payload.chunks is None:
+        raise ValueError("payload carries no wire chunks (legacy broadcast "
+                         "marker, or encoded with materialize=False)")
+    if payload.full:
+        # delta schemes send full snapshots as exact raw f32
+        full_fmt = fmt if not fmt.delta_coded else replace(fmt, scheme="f32")
+        return decode_concat(payload.chunks, full_fmt)
+    if held_flat is None:
+        raise ValueError("delta dispatch payload needs the held base model")
+    return held_flat + decode_concat(payload.chunks, fmt)
+
+
+class DispatchSession:
+    """Server-side downlink encoder with per-client version tracking.
+
+    One session serves the whole fleet; per-client state is the held
+    version (``versions``) plus, for delta-coded schemes, the error-feedback
+    residual (``residuals``).  ``encode`` is pure with respect to that state
+    — tracking commits in ``deliver`` so an undelivered payload (crash
+    inside the dispatch window) costs nothing and forces a full-snapshot
+    re-request via ``drop``.
+    """
+
+    def __init__(self, fmt: WireFormat, history: int):
+        self.fmt = fmt
+        self.history = max(1, int(history))
+        self.versions: dict[int, int] = {}       # cid -> held global version
+        self.residuals: dict[int, jnp.ndarray] = {}   # delta schemes only
+        self.full_dispatches = 0
+        self.delta_dispatches = 0
+
+    # ---------------------------------------------------------------- wire
+    def ring_versions(self, current: int) -> set[int]:
+        """Versions the bounded ring retains at global version ``current``."""
+        return {current - i for i in range(self.history) if current - i >= 0}
+
+    def encode(self, cid: int, target: int,
+               ring: dict[int, jnp.ndarray],
+               materialize: bool = True) -> DispatchPayload:
+        """Encode one dispatch of global version ``target`` to ``cid``.
+
+        ``ring`` maps version -> flat (P,) global (the server's
+        ``_history``).  Does not mutate tracking state.
+
+        ``materialize=False`` skips building the actual wire chunks for
+        *raw/full* payloads (their byte size has a closed form and their
+        content is exactly a ring entry), which is all the event simulator
+        needs — it prices ``nbytes`` and reconstructs training bases from
+        the ring, never from the chunks.  Delta payloads always
+        materialize: the error-feedback residual is defined by what the
+        encoded wire actually delivers.
+        """
+        g = ring[target]
+        fmt = self.fmt
+        held = self.versions.get(cid)
+        usable = (held is not None and held in ring
+                  and held in self.ring_versions(target))
+        if fmt.delta_coded and usable:
+            delta = g - ring[held]
+            r = self.residuals.get(cid)
+            vec = delta if r is None else delta + r
+            chunks = encode_flat(vec, fmt)
+            residual = vec - decode_concat(chunks, fmt) \
+                if int(vec.shape[0]) else None
+            return DispatchPayload(
+                cid=cid, target_version=target, base_version=held,
+                scheme=fmt.scheme, param_size=int(g.shape[0]), chunks=chunks,
+                nbytes=sum(c.nbytes for c in chunks), residual=residual)
+        # full snapshot: raw schemes ship themselves; delta schemes fall
+        # back to exact raw f32 (a lossy top-k of the *whole model* would be
+        # meaningless for a client with no base)
+        full_fmt = fmt if not fmt.delta_coded else replace(fmt, scheme="f32")
+        p = int(g.shape[0])
+        chunks = encode_flat(g, full_fmt) if materialize else None
+        return DispatchPayload(
+            cid=cid, target_version=target, base_version=None,
+            scheme=full_fmt.scheme, param_size=p, chunks=chunks,
+            nbytes=(sum(c.nbytes for c in chunks) if chunks is not None
+                    else (full_fmt.payload_bytes(p) if p
+                          else CHUNK_HEADER_BYTES)))
+
+    # ------------------------------------------------------------- tracking
+    def deliver(self, payload: DispatchPayload) -> None:
+        """The last wire chunk reached the client: commit version tracking,
+        the error-feedback residual this payload implies, and the
+        full/delta counters (payloads that die on the wire count nothing)."""
+        cid = payload.cid
+        if payload.full:
+            self.full_dispatches += 1
+        else:
+            self.delta_dispatches += 1
+        self.versions[cid] = payload.target_version
+        if payload.full or payload.residual is None:
+            # full snapshots reset error memory (f32 is exact; bf16 is a
+            # fresh base-free rounding either way)
+            self.residuals.pop(cid, None)
+        else:
+            self.residuals[cid] = payload.residual
+
+    def drop(self, cid: int) -> None:
+        """Forget a client's tracking state (crash / lost device): its next
+        dispatch re-requests a full snapshot."""
+        self.versions.pop(cid, None)
+        self.residuals.pop(cid, None)
+
+    def held_flat(self, cid: int,
+                  ring: dict[int, jnp.ndarray]) -> jnp.ndarray:
+        """The flat model the client currently holds.
+
+        f32 holds the ring version exactly; bf16 holds its bf16 rounding;
+        delta schemes hold ``ring[version] - residual`` — the error-feedback
+        invariant, so the server never stores per-client (P,) models, only
+        residuals (and only for clients that actually received deltas).
+        """
+        v = self.versions[cid]
+        g = ring[v]
+        if self.fmt.scheme == "bf16":
+            return g.astype(jnp.bfloat16).astype(jnp.float32)
+        r = self.residuals.get(cid)
+        return g if r is None else g - r
+
+    # ----------------------------------------------------------- checkpoint
+    def state_dict(self) -> dict:
+        # the ring depth is deliberately not persisted: restoring under a
+        # different dispatch_history is benign (out-of-ring holders just
+        # fall back to full snapshots), unlike a scheme change
+        return {
+            "scheme": self.fmt.scheme,
+            "versions": {str(c): int(v) for c, v in self.versions.items()},
+            "full_dispatches": int(self.full_dispatches),
+            "delta_dispatches": int(self.delta_dispatches),
+        }
+
+    def residual_trees(self) -> dict:
+        """Arrays to persist: per-client dispatch residuals (without them a
+        restart silently resets downlink error memory)."""
+        return {f"dr{cid}": r for cid, r in self.residuals.items()}
+
+    def load_state(self, state: dict, trees: dict) -> None:
+        self.versions = {int(c): int(v)
+                         for c, v in state.get("versions", {}).items()}
+        self.full_dispatches = int(state.get("full_dispatches", 0))
+        self.delta_dispatches = int(state.get("delta_dispatches", 0))
+        self.residuals = {
+            int(k[2:]): jnp.asarray(v, jnp.float32)
+            for k, v in trees.items() if k.startswith("dr")
+        }

@@ -10,14 +10,19 @@ metric of every paper-figure benchmark; learning itself is real (lazy local
 SGD at upload time), so time-to-accuracy curves are true learning curves
 under simulated cluster timing.
 
-Uplink timing is wire-accurate: when the bandwidth model is enabled, an
-upload takes ``up_latency + wire_bytes / up_bandwidth`` where ``wire_bytes``
-is the *actual* size of the chunked transport payload the server will ingest
-(runtime/transport.py) — so compression ratio, bf16 wire format, and SEAFL²
-partial uploads all move the time-to-accuracy curves, which is the paper's
-headline metric.  Per-client bandwidths are heavy-tailed (Pareto), like the
-compute speeds: the slow-uplink tail is exactly the straggler population
-SEAFL's semi-async buffer exists for.
+Link timing is wire-accurate in *both* directions: when the bandwidth model
+is enabled, an upload takes ``up_latency + wire_bytes / up_bandwidth`` where
+``wire_bytes`` is the *actual* size of the chunked transport payload the
+server will ingest (runtime/transport.py), and a dispatch takes
+``down_latency + dispatch_wire_bytes / down_bandwidth`` where the dispatch
+payload is the version-tracked, possibly delta-coded downlink transfer
+(runtime/dispatch.py; legacy ``dispatch_compression=None`` charges the raw
+f32 model size, the pre-dispatch behaviour, bit-for-bit).  So compression
+ratio, bf16 wire format, SEAFL² partial uploads, and delta-coded dispatch
+all move the time-to-accuracy curves, which is the paper's headline metric.
+Per-client bandwidths are heavy-tailed (Pareto), like the compute speeds:
+the slow-link tail is exactly the straggler population SEAFL's semi-async
+buffer exists for.
 
 Event flow per client: dispatch -> (down link) -> E epoch ends ->
 "upload" (training materialises, payload encoded, uplink time computed) ->
@@ -83,6 +88,8 @@ class InFlight:
     n_epochs_at_upload: int
     t0: float = 0.0               # training start (after the down link)
     notified: bool = False
+    payload: Any = None           # DispatchPayload on the downlink wire
+    arrive_event: Optional[_Event] = None   # payload delivery at t0
 
 
 class FLSimulation:
@@ -141,11 +148,14 @@ class FLSimulation:
         return max(1e-3, self.cfg.base_epoch_time * mult * abs(jitter)) \
             + self._idle_gap()
 
-    def _down_time(self, cid: int) -> float:
-        """Model broadcast: latency + f32 model bytes over the downlink."""
+    def _down_time(self, cid: int, nbytes: int) -> float:
+        """Model dispatch: latency + actual downlink wire bytes over the
+        per-client link rate.  Legacy broadcast payloads carry the raw f32
+        model size, so ``dispatch_compression=None`` keeps the pre-dispatch
+        timing bit-for-bit."""
         t = self.cfg.down_latency
         if self._down_bw is not None:
-            t += 4.0 * self.server.packer.size / self._down_bw[cid]
+            t += nbytes / self._down_bw[cid]
         return t
 
     def _up_time(self, cid: int, wire_bytes: int) -> float:
@@ -163,18 +173,46 @@ class FLSimulation:
     # ---------------------------------------------------------- dispatch
     def _dispatch(self, cid: int):
         E = self.server.cfg.local_epochs
-        t0 = self.now + self._down_time(cid)
+        # raw/full payload chunks are never read here (the training base is
+        # reconstructed server-side), so skip materialising them
+        payload = self.server.encode_dispatch(cid, materialize=False)
+        t0 = self.now + self._down_time(cid, payload.nbytes)
         ends, t = [], t0
         for _ in range(E):
             t += self._epoch_time(cid)
             ends.append(t)
+        train_fail = None
         if self.cfg.fail_prob > 0 and self._rng.random() < self.cfg.fail_prob:
             fail_at = t0 + self._rng.uniform(0, max(ends[-1] - t0, 1e-3))
-            self._push(fail_at, "fail", cid=cid)
+            train_fail = self._push(fail_at, "fail", cid=cid)
+        # With the bandwidth model on, a slow downlink makes the dispatch
+        # window a real slice of the client's lifetime, so it must be
+        # organically crashable too (mirror of the uplink-transfer hazard):
+        # a crash here kills the payload before delivery and the client
+        # re-requests a full snapshot.  At most one crash per dispatch — a
+        # download-window crash supersedes any training-window draw, else
+        # the stale training fail event would spuriously kill the client's
+        # *next* dispatch after recovery.  No draws with the model off —
+        # the legacy RNG stream stays untouched.
+        down = t0 - self.now
+        if (self._down_bw is not None and self.cfg.fail_prob > 0
+                and down > 0):
+            train_window = max(ends[-1] - t0, 1e-9)
+            p_down = self.cfg.fail_prob * down / (down + train_window)
+            if self._rng.random() < p_down:
+                if train_fail is not None:
+                    train_fail.valid = False
+                self._push(self.now + self._rng.uniform(0, down),
+                           "fail", cid=cid)
+        # the payload lands at t0: version tracking + downlink byte
+        # accounting commit then, whether or not the client survives the
+        # training that follows
+        arrive = self._push(t0, "arrive", cid=cid)
         ev = self._push(ends[-1], "upload", cid=cid)
         self._inflight[cid] = InFlight(
             cid=cid, version=self.server.round, epoch_ends=ends,
-            upload_event=ev, n_epochs_at_upload=E, t0=t0)
+            upload_event=ev, n_epochs_at_upload=E, t0=t0, payload=payload,
+            arrive_event=arrive)
 
     def _notify(self, cid: int):
         """Server NOTIFY (SEAFL², Algorithm 2): arrives after down link."""
@@ -201,7 +239,11 @@ class FLSimulation:
         fl = self._inflight.pop(cid, None)
         if fl is None:
             return
-        base = self.server.params_at(fl.version)
+        # the dispatch payload was delivered at t0 (the "arrive" event);
+        # training materialises lazily now, from the model the client
+        # actually received — the delta reconstruction under lossy
+        # dispatch, the exact global under legacy/f32 dispatch
+        base = self.server.dispatch_model(cid)
         client = self.clients[cid]
         w, loss = client.local_train(base, fl.n_epochs_at_upload,
                                      self.server.cfg.local_lr)
@@ -238,6 +280,7 @@ class FLSimulation:
                "staleness_mean": float(np.mean(agg.staleness)),
                "staleness_max": float(np.max(agg.staleness)),
                "bytes": int(self.server.bytes_uploaded),
+               "bytes_down": int(self.server.bytes_downloaded),
                "loss": last_loss}
         if self.eval_fn is not None and (agg.round % self.eval_every == 0):
             rec["acc"] = float(self.eval_fn(self.server.params))
@@ -275,6 +318,10 @@ class FLSimulation:
             self.now = ev.time
             if ev.kind == "upload":
                 self._handle_upload(ev.data["cid"])
+            elif ev.kind == "arrive":
+                fl = self._inflight.get(ev.data["cid"])
+                if fl is not None and fl.payload is not None:
+                    self.server.deliver_dispatch(fl.cid, fl.payload)
             elif ev.kind == "deliver":
                 self._handle_deliver(ev.data["cid"], ev.data["payload"],
                                      ev.data["loss"])
@@ -293,6 +340,11 @@ class FLSimulation:
                 if fl is not None or deliver is not None:
                     if fl is not None:
                         fl.upload_event.valid = False
+                        # a crash inside the dispatch window kills the
+                        # downlink payload: it is never delivered and the
+                        # client re-requests a full snapshot on recovery
+                        if fl.arrive_event is not None:
+                            fl.arrive_event.valid = False
                     for c in self.server.mark_failed(cid):
                         self._dispatch(c)
                     self._push(self.now + self.cfg.recover_after,
@@ -312,9 +364,18 @@ class FLSimulation:
                 return h["time"]
         return None
 
-    def bytes_to_accuracy(self, target: float) -> Optional[int]:
-        """Cumulative uplink wire bytes when ``target`` was first reached."""
+    def bytes_to_accuracy(self, target: float,
+                          direction: str = "up") -> Optional[int]:
+        """Cumulative wire bytes when ``target`` was first reached.
+
+        ``direction``: 'up' (uplink only — the historical metric), 'down'
+        (downlink only), or 'total' (both directions — the honest traffic
+        number; fig7 under-reported it before the dispatch subsystem)."""
+        if direction not in ("up", "down", "total"):
+            raise ValueError(f"unknown direction {direction!r}")
         for h in self.history:
             if h.get("acc", 0.0) >= target:
-                return h["bytes"]
+                up, down = h["bytes"], h.get("bytes_down", 0)
+                return {"up": up, "down": down,
+                        "total": up + down}[direction]
         return None

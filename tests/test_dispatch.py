@@ -1,0 +1,601 @@
+"""Downlink dispatch subsystem: version-tracked delta-coded broadcast.
+
+Covers the wire round-trips (f32 bit-identity, bf16/topk/int8 parity), the
+full-snapshot re-request after a crash inside the dispatch window, the
+checkpointing of per-client dispatch versions + the global-history ring, the
+legacy-timing pin, the downlink-constrained time-to-accuracy regression, the
+SEAFL² partial-upload byte coupling, and the coalesced ingest writes.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.server import FLConfig, SeaflServer
+from repro.runtime.dispatch import DispatchSession, apply_dispatch
+from repro.runtime.transport import make_wire_format
+
+RNG = np.random.default_rng(21)
+
+
+def make_server(algorithm="seafl", n=12, M=6, K=3, beta=4.0, **kw):
+    params = {"w": jnp.zeros((11, 7)), "b": {"c": jnp.zeros((13,))}}
+    cfg = FLConfig(algorithm=algorithm, n_clients=n, concurrency=M,
+                   buffer_size=K, staleness_limit=beta, seed=0, **kw)
+    return SeaflServer(cfg, params, {i: 10 * (i + 1) for i in range(n)})
+
+
+def perturbed(base, rng, scale=0.1):
+    return jax.tree.map(lambda x: x + scale * jnp.asarray(
+        rng.normal(size=x.shape).astype(np.float32)), base)
+
+
+def drive_round_trip(s, rng, cid=None):
+    """One full client lifecycle: dispatch -> deliver -> train -> upload."""
+    cid = sorted(s.active)[0] if cid is None else cid
+    payload = s.encode_dispatch(cid)
+    s.deliver_dispatch(cid, payload)
+    w = perturbed(s.dispatch_model(cid), rng)
+    return cid, payload, s.on_update(cid, w, n_epochs=s.cfg.local_epochs)
+
+
+# ----------------------------------------------------------- session wire
+
+def test_session_full_then_delta():
+    """A fresh client gets a full f32 snapshot; a returning client whose
+    version is still in the ring gets a delta; the reconstruction tracks
+    the ring exactly (f32 full) / within EF error (topk delta)."""
+    rng = np.random.default_rng(0)
+    P = 500
+    ring = {0: jnp.asarray(rng.normal(size=P).astype(np.float32))}
+    ring[1] = ring[0] + 0.05 * jnp.asarray(
+        rng.normal(size=P).astype(np.float32))
+    sess = DispatchSession(make_wire_format("topk:0.1", 128), history=4)
+
+    full = sess.encode(7, 0, ring)
+    assert full.full and full.scheme == "f32"
+    held = apply_dispatch(full, sess.fmt)
+    np.testing.assert_array_equal(np.asarray(held), np.asarray(ring[0]))
+    sess.deliver(full)
+    assert sess.versions[7] == 0
+
+    delta = sess.encode(7, 1, ring)
+    assert not delta.full and delta.base_version == 0
+    assert delta.scheme == "topk"
+    assert delta.nbytes < full.nbytes / 3          # the byte win
+    held = apply_dispatch(delta, sess.fmt, held)
+    sess.deliver(delta)
+    assert sess.versions[7] == 1
+    # one lossy delta stays within the dropped-mass bound...
+    err = np.max(np.abs(np.asarray(held) - np.asarray(ring[1])))
+    assert err <= 0.05 * 3
+    # ...and the server's held_flat algebra agrees with the literal
+    # chunk-applied reconstruction to float rounding
+    np.testing.assert_allclose(np.asarray(sess.held_flat(7, ring)),
+                               np.asarray(held), atol=1e-5)
+
+
+def test_f32_dispatch_bit_identical_every_round():
+    """Acceptance: the f32 scheme hands every client exactly the server's
+    (P,) global, full snapshot and repeat dispatches alike."""
+    rng = np.random.default_rng(1)
+    s = make_server(dispatch_compression="f32")
+    s.start()
+    held = s.packer.zeros()         # client-side bootstrap state
+    for _ in range(8):
+        cid = sorted(s.active)[0]
+        payload = s.encode_dispatch(cid)
+        held = apply_dispatch(payload, s.dispatch.fmt, held)
+        np.testing.assert_array_equal(
+            np.asarray(held), np.asarray(s.flat_at(s.active[cid])))
+        s.deliver_dispatch(cid, payload)
+        # the training-base boundary is the same bits too
+        np.testing.assert_array_equal(
+            np.asarray(s.packer.pack(s.dispatch_model(cid))),
+            np.asarray(s.flat_at(s.active[cid])))
+        s.on_update(cid, perturbed(s.dispatch_model(cid), rng), 5)
+
+
+def test_lazy_encode_prices_identical_bytes():
+    """The simulator's materialize=False fast path must charge exactly the
+    bytes the materialised wire payload would occupy, for raw schemes and
+    for the delta schemes' full-snapshot fallback alike."""
+    for scheme in ["f32", "bf16", "topk:0.1", "int8"]:
+        s = make_server(dispatch_compression=scheme)
+        s.start()
+        cid = sorted(s.active)[0]
+        lazy = s.encode_dispatch(cid, materialize=False)
+        eager = s.encode_dispatch(cid, materialize=True)
+        assert lazy.chunks is None and eager.chunks is not None
+        assert lazy.nbytes == eager.nbytes
+        assert (lazy.full, lazy.scheme) == (eager.full, eager.scheme)
+        # delivering the lazy payload still commits version tracking
+        s.deliver_dispatch(cid, lazy)
+        assert s.dispatch.versions[cid] == lazy.target_version
+
+
+def test_bf16_dispatch_matches_bf16_cast():
+    s = make_server(dispatch_compression="bf16")
+    s.start()
+    cid = sorted(s.active)[0]
+    payload = s.encode_dispatch(cid)
+    assert payload.scheme == "bf16"
+    got = apply_dispatch(payload, s.dispatch.fmt)
+    want = s.global_flat.astype(jnp.bfloat16).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    s.deliver_dispatch(cid, payload)
+    np.testing.assert_array_equal(
+        np.asarray(s.packer.pack(s.dispatch_model(cid))), np.asarray(want))
+
+
+@pytest.mark.parametrize("algorithm", ["seafl", "seafl2", "fedbuff",
+                                       "fedasync", "fedavg"])
+@pytest.mark.parametrize("scheme", ["bf16", "topk:0.2"])
+def test_delta_reconstruction_parity_all_algorithms(algorithm, scheme):
+    """Acceptance: under lossy dispatch every algorithm keeps the clients'
+    reconstructions within 1e-2 of the exact global they stand in for (the
+    top-k dropped mass scales with round-over-round drift, so the fleet
+    drives realistic 1e-2-scale local updates)."""
+    rng = np.random.default_rng(2)
+    beta = 4.0 if algorithm in ("seafl", "seafl2") else None
+    s = make_server(algorithm, beta=beta, dispatch_compression=scheme,
+                    dispatch_history=6)
+    s.start()
+    deltas_seen = 0
+    for _ in range(18):
+        cid = sorted(s.active)[0]
+        payload = s.encode_dispatch(cid)
+        deltas_seen += 0 if payload.full else 1
+        s.deliver_dispatch(cid, payload)
+        held = np.asarray(s.packer.pack(s.dispatch_model(cid)))
+        exact = np.asarray(s.flat_at(s.active[cid]))
+        np.testing.assert_allclose(held, exact, atol=1e-2)
+        s.on_update(cid, perturbed(s.dispatch_model(cid), rng, scale=0.01),
+                    5)
+    if s.dispatch.fmt.delta_coded:
+        assert deltas_seen > 0       # the delta path was actually exercised
+
+
+def test_error_feedback_keeps_topk_dispatch_convergent():
+    """Round after round of top-k deltas must not accumulate drift: the
+    server-side residual re-ships what the wire dropped."""
+    rng = np.random.default_rng(3)
+    s = make_server(dispatch_compression="topk:0.1", dispatch_history=8)
+    s.start()
+    errs = []
+    for _ in range(24):
+        cid = sorted(s.active)[0]
+        payload = s.encode_dispatch(cid)
+        s.deliver_dispatch(cid, payload)
+        held = np.asarray(s.packer.pack(s.dispatch_model(cid)))
+        exact = np.asarray(s.flat_at(s.active[cid]))
+        errs.append(float(np.max(np.abs(held - exact))))
+        s.on_update(cid, perturbed(s.dispatch_model(cid), rng, scale=0.01),
+                    5)
+    # error stays bounded (no monotone blow-up across 24 lossy dispatches)
+    assert max(errs) <= 2e-2, errs
+
+
+# ----------------------------------------------------- crash / re-request
+
+def test_crash_mid_dispatch_forces_full_snapshot():
+    """A payload that dies on the wire leaves no tracking state: after the
+    crash the client's next dispatch is a full f32 snapshot re-request."""
+    rng = np.random.default_rng(4)
+    s = make_server(dispatch_compression="topk:0.1")
+    s.start()
+    # establish a delta-eligible client
+    cid, _, _ = drive_round_trip(s, rng)
+    s.mark_dispatched(cid) if cid not in s.active else None
+    payload = s.encode_dispatch(cid)
+    assert not payload.full                     # it would have been a delta
+    # the payload dies inside the dispatch window: never delivered
+    s.mark_failed(cid)
+    assert cid not in s.dispatch.versions       # tracking dropped
+    s.recover(cid)
+    s.mark_dispatched(cid)
+    payload = s.encode_dispatch(cid)
+    assert payload.full and payload.scheme == "f32"
+    # and the f32 snapshot is exact
+    got = apply_dispatch(payload, s.dispatch.fmt)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(s.flat_at(s.active[cid])))
+
+
+def test_version_aged_out_of_ring_forces_full_snapshot():
+    """The ring is bounded: a client whose held version fell out of the
+    last `dispatch_history` globals gets a full snapshot, not a delta."""
+    rng = np.random.default_rng(5)
+    s = make_server(dispatch_compression="topk:0.5", dispatch_history=2,
+                    K=2, beta=None)
+    s.start()
+    lagger = sorted(s.active)[0]
+    cid, payload, _ = drive_round_trip(s, rng, cid=lagger)
+    s.mark_dispatched(lagger)
+    payload = s.encode_dispatch(lagger)
+    s.deliver_dispatch(lagger, payload)         # lagger holds some version v
+    held_v = s.dispatch.versions[lagger]
+    # ...the fleet advances several rounds without the lagger
+    rounds = 0
+    while s.round < held_v + 4:
+        others = [c for c in sorted(s.active) if c != lagger]
+        drive_round_trip(s, rng, cid=others[0])
+        rounds += 1
+        assert rounds < 60
+    # lagger's held version aged out: full snapshot (even though a delta
+    # would be legal if the ring were deeper)
+    s.active.pop(lagger, None)
+    s.idle.add(lagger)
+    s.mark_dispatched(lagger)
+    p2 = s.encode_dispatch(lagger)
+    assert p2.full and p2.scheme == "f32"
+
+
+def test_ring_stays_bounded():
+    """History retention is the active-version set plus at most
+    `dispatch_history` ring entries — no unbounded growth."""
+    rng = np.random.default_rng(6)
+    s = make_server(dispatch_compression="topk:0.1", dispatch_history=3,
+                    beta=None)
+    s.start()
+    for _ in range(30):
+        drive_round_trip(s, rng)
+    assert len(s._history) <= len(set(s.active.values())) + 3
+
+
+# ------------------------------------------------------------- checkpoint
+
+def test_checkpoint_restores_dispatch_versions_ring_and_residuals():
+    """Acceptance: per-client dispatch versions and the global-history ring
+    survive checkpoint/restore; the restored server encodes byte- and
+    value-identical payloads."""
+    rng = np.random.default_rng(7)
+    s = make_server(dispatch_compression="topk:0.1", dispatch_history=4)
+    s.start()
+    for _ in range(10):
+        drive_round_trip(s, rng)
+    state, trees = s.state_dict(), s.checkpoint_trees()
+    assert state["dispatch"]["versions"]
+    assert any(k.startswith("dr") for k in trees)
+    ring_keys = {k for k in trees if k.startswith("v")}
+    assert len(ring_keys) > 1                    # the ring is persisted
+
+    s2 = make_server(dispatch_compression="topk:0.1", dispatch_history=4)
+    s2.load_state(state, trees)
+    assert s2.dispatch.versions == s.dispatch.versions
+    assert s2.dispatch.full_dispatches == s.dispatch.full_dispatches
+    assert s2.dispatch.delta_dispatches == s.dispatch.delta_dispatches
+    assert set(s2._history) == set(s._history)
+    for cid, r in s.dispatch.residuals.items():
+        np.testing.assert_array_equal(np.asarray(s2.dispatch.residuals[cid]),
+                                      np.asarray(r))
+    # both servers encode the identical next dispatch for the same client
+    cid = sorted(s.active)[0]
+    pa, pb = s.encode_dispatch(cid), s2.encode_dispatch(cid)
+    assert (pa.full, pb.full) == (False, False)
+    assert pa.nbytes == pb.nbytes and pa.base_version == pb.base_version
+    for ca, cb in zip(pa.chunks, pb.chunks):
+        np.testing.assert_array_equal(np.asarray(ca.payload["val"]),
+                                      np.asarray(cb.payload["val"]))
+        np.testing.assert_array_equal(np.asarray(ca.payload["idx"]),
+                                      np.asarray(cb.payload["idx"]))
+
+
+def test_restore_into_no_dispatch_config_warns_and_drops():
+    rng = np.random.default_rng(8)
+    s = make_server(dispatch_compression="topk:0.1")
+    s.start()
+    for _ in range(6):
+        drive_round_trip(s, rng)
+    state, trees = s.state_dict(), s.checkpoint_trees()
+    s2 = make_server()                           # dispatch_compression=None
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        s2.load_state(state, trees)
+    assert any("dispatch" in str(w.message) for w in caught)
+    assert s2.dispatch is None
+    drive_round_trip(s2, rng)                    # legacy path still healthy
+
+
+def test_restore_under_different_scheme_resets_tracking():
+    rng = np.random.default_rng(9)
+    s = make_server(dispatch_compression="topk:0.1")
+    s.start()
+    for _ in range(6):
+        drive_round_trip(s, rng)
+    state, trees = s.state_dict(), s.checkpoint_trees()
+    s2 = make_server(dispatch_compression="bf16")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        s2.load_state(state, trees)
+    assert any("scheme" in str(w.message) for w in caught)
+    assert not s2.dispatch.versions and not s2.dispatch.residuals
+    drive_round_trip(s2, rng)
+
+
+# ------------------------------------------------------ simulator timing
+
+def _experiment(dispatch, bandwidth="none", down_mbps=50.0, seed=3,
+                rounds=4, fail_prob=0.0, algorithm="seafl", **fl_kw):
+    from repro.experiment import ExperimentConfig, run_experiment
+    from repro.runtime.simulator import SimConfig
+    fl = FLConfig(algorithm=algorithm, n_clients=8, concurrency=4,
+                  buffer_size=2, staleness_limit=4, local_epochs=2,
+                  local_lr=0.05, batch_size=16, seed=seed,
+                  dispatch_compression=dispatch, **fl_kw)
+    cfg = ExperimentConfig(
+        dataset="tiny", n_train=400, n_test=80, model="mlp", fl=fl,
+        sim=SimConfig(speed_model="pareto", seed=seed,
+                      bandwidth_model=bandwidth, up_mbps=50.0,
+                      down_mbps=down_mbps, fail_prob=fail_prob,
+                      recover_after=5.0),
+        seed=seed)
+    return run_experiment(cfg, max_rounds=rounds)
+
+
+def test_legacy_timing_pin_f32_dispatch_bit_identical():
+    """Acceptance: with bandwidth_model='none', turning the dispatch
+    subsystem on with the f32 scheme reproduces legacy event times, the
+    learning trajectory, the final global (bit-identical), and the
+    simulator RNG stream exactly."""
+    s0, h0 = _experiment(None)
+    s1, h1 = _experiment("f32")
+    assert [h["time"] for h in h0] == [h["time"] for h in h1]
+    assert [h.get("acc") for h in h0] == [h.get("acc") for h in h1]
+    assert np.array_equal(np.asarray(s0.server.global_flat),
+                          np.asarray(s1.server.global_flat))
+    assert s0._rng.bit_generator.state == s1._rng.bit_generator.state
+
+
+def test_legacy_timing_pin_lossy_dispatch_same_event_times():
+    """Under bandwidth_model='none' even lossy dispatch changes *what* the
+    clients train on, never *when* events fire or which RNG draws happen."""
+    s0, h0 = _experiment(None)
+    s1, h1 = _experiment("topk:0.1")
+    assert [h["time"] for h in h0] == [h["time"] for h in h1]
+    assert [h["round"] for h in h0] == [h["round"] for h in h1]
+    assert s0._rng.bit_generator.state == s1._rng.bit_generator.state
+
+
+def test_topk_dispatch_faster_on_constrained_downlink():
+    """Acceptance: with the bandwidth model on and a slow downlink,
+    delta-coded dispatch measurably reduces simulated time-to-accuracy vs
+    full-f32 broadcast (pinned regression)."""
+    s_raw, h_raw = _experiment(None, bandwidth="pareto", down_mbps=0.05,
+                               rounds=6)
+    s_topk, h_topk = _experiment("topk:0.1", bandwidth="pareto",
+                                 down_mbps=0.05, rounds=6)
+    assert h_raw[-1]["round"] == h_topk[-1]["round"]
+    t_raw, t_topk = h_raw[-1]["time"], h_topk[-1]["time"]
+    assert t_topk < 0.8 * t_raw, (t_raw, t_topk)
+    assert s_topk.server.bytes_downloaded < 0.6 * s_raw.server.bytes_downloaded
+    assert s_topk.server.dispatch.delta_dispatches > 0
+
+
+def test_crashes_with_dispatch_deltas_recover_via_full_snapshot():
+    """End-to-end: crashes under delta dispatch never wedge the run; the
+    session records full-snapshot re-requests beyond the first wave."""
+    s, h = _experiment("topk:0.1", bandwidth="pareto", down_mbps=0.2,
+                       rounds=8, fail_prob=0.3, algorithm="seafl2")
+    assert len(h) >= 3 and np.isfinite(h[-1]["time"])
+    d = s.server.dispatch
+    # more full snapshots than the initial concurrency wave => re-requests
+    assert d.full_dispatches > s.server.cfg.concurrency
+    assert d.delta_dispatches > 0
+
+
+def test_crash_during_download_kills_payload_before_delivery():
+    """A crash inside the dispatch window invalidates the arrive event: no
+    downlink bytes are counted, no version tracking commits, and at most
+    one fail event is pending per dispatch (a download-window crash
+    supersedes the training-window draw)."""
+    from repro.experiment import ExperimentConfig, build_experiment
+    from repro.runtime.simulator import SimConfig
+    # n_clients == concurrency: no idle replacements, so the snapshot below
+    # covers every dispatch that can possibly deliver
+    fl = FLConfig(algorithm="seafl", n_clients=3, concurrency=3,
+                  buffer_size=2, staleness_limit=None, local_epochs=2,
+                  batch_size=16, seed=4, dispatch_compression="topk:0.1")
+    cfg = ExperimentConfig(
+        dataset="tiny", n_train=300, n_test=60, model="mlp", fl=fl,
+        sim=SimConfig(seed=4, bandwidth_model="pareto", up_mbps=5.0,
+                      down_mbps=0.01, fail_prob=1.0, recover_after=1.0),
+        seed=4)
+    sim, _, _ = build_experiment(cfg)
+    for cid in sim.server.start():
+        sim._dispatch(cid)
+    # slow downlink + fail_prob=1: every dispatch draws a crash, and at
+    # most one fail event per client may be pending
+    for cid, fl_state in sim._inflight.items():
+        fails = [e for e in sim._heap if e.kind == "fail" and e.valid
+                 and e.data["cid"] == cid]
+        assert len(fails) <= 1
+    snapshot = dict(sim._inflight)
+    # pick a client whose crash draw landed inside its download window
+    doomed = [(c, f, e) for c, f in sorted(sim._inflight.items())
+              for e in sim._heap
+              if e.kind == "fail" and e.valid and e.data["cid"] == c
+              and e.time < f.t0]
+    assert doomed, "downlink at 0.01 Mbps must dominate the crash hazard"
+    cid, fl_state, fail_ev = doomed[0]
+    fails = [fail_ev]
+    sim.run(max_time=fails[0].time + 1e-9)
+    assert not fl_state.arrive_event.valid        # payload died on the wire
+    assert cid not in sim.server.dispatch.versions
+    # only payloads whose arrive actually fired are on the bytes ledger
+    delivered = sum(f.payload.nbytes for f in snapshot.values()
+                    if f.arrive_event.valid and f.arrive_event.time <= sim.now)
+    assert sim.server.bytes_downloaded == delivered
+
+
+def test_crash_during_training_still_counts_delivered_download():
+    """The payload lands at t0: a client that crashes *after* the download
+    window still has its downlink bytes accounted (the transfer really
+    happened), while mark_failed voids its tracking state."""
+    from repro.experiment import ExperimentConfig, build_experiment
+    from repro.runtime.simulator import SimConfig
+    fl = FLConfig(algorithm="seafl", n_clients=6, concurrency=3,
+                  buffer_size=2, staleness_limit=None, local_epochs=2,
+                  batch_size=16, seed=5, dispatch_compression="topk:0.1")
+    cfg = ExperimentConfig(
+        dataset="tiny", n_train=300, n_test=60, model="mlp", fl=fl,
+        sim=SimConfig(seed=5, bandwidth_model="pareto", up_mbps=5.0,
+                      down_mbps=50.0), seed=5)
+    sim, _, _ = build_experiment(cfg)
+    for cid in sim.server.start():
+        sim._dispatch(cid)
+    cid, fl_state = sorted(sim._inflight.items())[0]
+    crash_at = (fl_state.t0 + fl_state.epoch_ends[0]) / 2   # mid-training
+    sim._push(crash_at, "fail", cid=cid)
+    sim.run(max_time=crash_at + 1e-9)
+    assert sim.server.bytes_downloaded >= fl_state.payload.nbytes
+    assert cid not in sim.server.dispatch.versions  # state lost with device
+    sim.server.recover(cid)
+    sim.server.mark_dispatched(cid)
+    assert sim.server.encode_dispatch(cid).full     # full-snapshot re-request
+
+
+def test_history_records_bytes_both_directions():
+    s, h = _experiment(None, bandwidth="pareto", rounds=4)
+    ups = [x["bytes"] for x in h]
+    downs = [x["bytes_down"] for x in h]
+    assert all(b > 0 for b in ups) and all(b > 0 for b in downs)
+    assert downs == sorted(downs)
+    # legacy dispatch charges the raw f32 model per dispatch
+    assert s.server.bytes_downloaded % (4 * s.server.packer.size) == 0
+
+
+def test_bytes_to_accuracy_directions():
+    s, h = _experiment(None, bandwidth="pareto", rounds=6)
+    accs = [x.get("acc", 0.0) for x in h]
+    target = max(accs) - 1e-9
+    up = s.bytes_to_accuracy(target, direction="up")
+    down = s.bytes_to_accuracy(target, direction="down")
+    total = s.bytes_to_accuracy(target, direction="total")
+    assert up > 0 and down > 0 and total == up + down
+    assert s.bytes_to_accuracy(target) == up       # default stays uplink
+    with pytest.raises(ValueError):
+        s.bytes_to_accuracy(target, direction="sideways")
+
+
+# -------------------------------------------------- SEAFL2 byte coupling
+
+def test_partial_upload_ships_fewer_bytes():
+    """Satellite: a notified client that completed n' < E epochs ships a
+    topk payload with its ratio scaled by n'/E."""
+    s = make_server("seafl2", compression="topk:0.4", beta=None)
+    s.start()
+    rng = np.random.default_rng(10)
+    cid = sorted(s.active)[0]
+    w = perturbed(s.params_at(s.active[cid]), rng)
+    full = s.encode_update(cid, w, n_epochs=s.cfg.local_epochs)
+    partial = s.encode_update(cid, w, n_epochs=1)
+    assert partial.n_epochs == 1
+    ratio = partial.nbytes / full.nbytes
+    assert ratio < 0.35, ratio        # ~1/5 of the kept elements (+headers)
+    # raw schemes are unaffected (nothing to scale)
+    s2 = make_server("seafl2", compression="bf16", beta=None)
+    s2.start()
+    cid2 = sorted(s2.active)[0]
+    w2 = perturbed(s2.params_at(s2.active[cid2]), rng)
+    assert s2.encode_update(cid2, w2, 1).nbytes == \
+        s2.encode_update(cid2, w2, s2.cfg.local_epochs).nbytes
+
+
+def test_partial_uploads_finish_faster_on_slow_uplink():
+    """Satellite regression: under the bandwidth model the scaled-ratio
+    partial payload spends proportionally less time on the wire."""
+    from repro.experiment import ExperimentConfig, build_experiment
+    from repro.runtime.simulator import SimConfig
+    fl = FLConfig(algorithm="seafl2", n_clients=8, concurrency=4,
+                  buffer_size=2, staleness_limit=4, local_epochs=4,
+                  local_lr=0.05, batch_size=16, seed=6,
+                  compression="topk:0.4")
+    cfg = ExperimentConfig(
+        dataset="tiny", n_train=400, n_test=80, model="mlp", fl=fl,
+        sim=SimConfig(speed_model="pareto", seed=6,
+                      bandwidth_model="pareto", up_mbps=0.05,
+                      down_mbps=50.0),
+        seed=6)
+    sim, _, _ = build_experiment(cfg)
+    for cid in sim.server.start():
+        sim._dispatch(cid)
+    up = min((e for e in sim._heap if e.kind == "upload"),
+             key=lambda e: (e.time, e.seq))
+    cid = up.data["cid"]
+    fl_state = sim._inflight[cid]
+    up.valid = False
+    sim.now = up.time
+    # full upload timing
+    sim_full_epochs = fl_state.n_epochs_at_upload
+    assert sim_full_epochs == 4
+    sim._handle_upload(cid)
+    t_full = sim._delivering[cid].time - sim.now
+    full_bytes = sim._delivering[cid].data["payload"].nbytes
+    # re-run the same client as a notified partial (1 epoch)
+    sim._delivering.pop(cid).valid = False
+    sim.server.active[cid] = sim.server.round    # re-activate
+    sim._inflight[cid] = fl_state
+    fl_state.n_epochs_at_upload = 1
+    sim._handle_upload(cid)
+    t_partial = sim._delivering[cid].time - sim.now
+    partial_bytes = sim._delivering[cid].data["payload"].nbytes
+    assert partial_bytes < 0.35 * full_bytes
+    assert t_partial < 0.5 * t_full
+
+
+# -------------------------------------------------- coalesced ingest writes
+
+def test_write_all_bit_identical_and_single_write():
+    """Satellite: a drained batch of adjacent chunks coalesces into one
+    donated buffer write with bit-identical slot contents."""
+    from repro.core.buffer import Update, UpdateBuffer
+    from repro.runtime.transport import IngestSession, encode_update
+
+    rng = np.random.default_rng(11)
+    P, ce = 400, 64
+    base = jnp.asarray(rng.normal(size=P).astype(np.float32))
+    vec = base + jnp.asarray(rng.normal(size=P).astype(np.float32))
+    for spec in ["f32", "bf16", "topk:0.25", "int8"]:
+        fmt = make_wire_format(spec, ce)
+        pl = encode_update(0, 0, 1, vec, fmt,
+                           base_flat=base if fmt.delta_coded else None)
+        bufs, calls = [], []
+        for coalesced in (False, True):
+            buf = UpdateBuffer(1, P)
+            n_calls = [0]
+            orig = buf.write_range
+            def counted(slot, start, vals, _o=orig, _n=n_calls):
+                _n[0] += 1
+                return _o(slot, start, vals)
+            buf.write_range = counted
+            slot = buf.reserve(Update(0, 1, 0, 1))
+            sess = IngestSession(buf, slot, fmt,
+                                 base_flat=base if fmt.delta_coded else None)
+            if coalesced:
+                sess.write_all(pl.chunks)
+            else:
+                for c in pl.chunks:
+                    sess.write(c)
+            assert sess.finish() == pl.nbytes
+            buf.commit(slot)
+            bufs.append(np.asarray(buf.stacked_flat()[0]))
+            calls.append(n_calls[0])
+        np.testing.assert_array_equal(bufs[0], bufs[1])
+        assert calls[0] == len(pl.chunks) and calls[1] == 1
+
+
+def test_write_all_still_validates_order():
+    from repro.core.buffer import Update, UpdateBuffer
+    from repro.runtime.transport import IngestSession, encode_flat
+
+    fmt = make_wire_format("f32", 16)
+    chunks = encode_flat(jnp.ones(64), fmt)
+    buf = UpdateBuffer(1, 64)
+    sess = IngestSession(buf, buf.reserve(Update(0, 1, 0, 1)), fmt)
+    with pytest.raises(ValueError):
+        sess.write_all(chunks[1:])               # missing the first chunk
+    sess.write_all(chunks)
+    assert sess.complete
