@@ -1,0 +1,185 @@
+"""Benchmark regression gate: current BENCH_*.json vs committed baselines.
+
+CI runs the wire benchmarks (``python -m benchmarks.run --only wire``), then
+this module compares the freshly written ``benchmarks/BENCH_ingest.json``
+and ``benchmarks/BENCH_dispatch.json`` against the committed snapshots in
+``benchmarks/baselines/`` and **fails** (exit 1) when any gated throughput
+metric — ingest MB/s (per-chunk, coalesced, or batched-flush) or dispatch
+decode+apply MB/s — regresses more than ``THRESHOLD`` (20%) below its
+baseline.  Non-throughput fields (wire bytes, hit rates, speedup ratios)
+are reported in the delta table but never gate: byte counts are asserted
+exactly by the test suite, and ratios are derived from the gated numbers.
+
+The delta table prints to stdout and, when ``GITHUB_STEP_SUMMARY`` is set
+(inside a GitHub Actions job), is appended there as a markdown job summary.
+
+Absolute MB/s is machine-class-relative: the committed baselines describe
+the runner class CI uses (the gated timings are best-of-3 to suppress
+scheduler noise, and the 20% band absorbs run-to-run variance within one
+class).  Refresh the baselines — from a CI artifact of the target runner
+class, not a local laptop — after an intentional perf change *or* a runner
+class change::
+
+    PYTHONPATH=src:. python -m benchmarks.run --only wire
+    PYTHONPATH=src:. python -m benchmarks.compare --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+BASELINE_DIR = os.path.join(BENCH_DIR, "baselines")
+FILES = ("BENCH_ingest.json", "BENCH_dispatch.json")
+THRESHOLD = 0.20          # fail below (1 - THRESHOLD) x baseline
+
+# metric keys gated per schemes[...] entry, by file
+GATED = {
+    "BENCH_ingest.json": (
+        "ingest_MBps", "ingest_MBps_coalesced", "stream_batched_MBps"),
+    "BENCH_dispatch.json": ("apply_MBps",),
+}
+# informational (never gating) keys shown in the table when present
+INFO = {
+    "BENCH_ingest.json": ("batch_flush_speedup", "coalesce_speedup"),
+    "BENCH_dispatch.json": (),
+}
+
+
+def _flatten(fname: str, data: dict) -> tuple[dict, dict]:
+    """-> ({metric: value} gated, {metric: value} informational)."""
+    gated, info = {}, {}
+    for spec, entry in data.get("schemes", {}).items():
+        for key in GATED[fname]:
+            if entry.get(key) is not None:
+                gated[f"{spec}/{key}"] = float(entry[key])
+        for key in INFO[fname]:
+            if entry.get(key) is not None:
+                info[f"{spec}/{key}"] = float(entry[key])
+    for spec, entry in data.get("encode_cache", {}).items():
+        if isinstance(entry, dict) and \
+                entry.get("amortized_speedup") is not None:
+            info[f"encode_cache/{spec}/amortized_speedup"] = \
+                float(entry["amortized_speedup"])
+    for depth, entry in data.get("delta_hit_rate", {}).items():
+        if isinstance(entry, dict) and \
+                entry.get("encode_cache_hit_rate") is not None:
+            info[f"hit_rate_depth{depth}/encode_cache_hit_rate"] = \
+                float(entry["encode_cache_hit_rate"])
+    return gated, info
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(threshold: float = THRESHOLD) -> tuple[list[tuple], list[str]]:
+    """-> (table rows: (metric, baseline, current, delta, status), failures)."""
+    rows, failures = [], []
+    for fname in FILES:
+        cur_path = os.path.join(BENCH_DIR, fname)
+        base_path = os.path.join(BASELINE_DIR, fname)
+        if not os.path.exists(cur_path):
+            failures.append(f"{fname}: current report missing (did the "
+                            f"benchmark run?)")
+            continue
+        if not os.path.exists(base_path):
+            failures.append(f"{fname}: no committed baseline at {base_path}")
+            continue
+        cur_g, cur_i = _flatten(fname, _load(cur_path))
+        base_g, base_i = _flatten(fname, _load(base_path))
+        for metric in sorted(set(base_g) | set(cur_g)):
+            tag = f"{fname.removeprefix('BENCH_').removesuffix('.json')}" \
+                  f"/{metric}"
+            b, c = base_g.get(metric), cur_g.get(metric)
+            if c is None:
+                failures.append(f"{tag}: gated metric disappeared from the "
+                                f"current report")
+                rows.append((tag, b, None, None, "MISSING"))
+                continue
+            if b is None:
+                rows.append((tag, None, c, None, "new"))
+                continue
+            delta = (c - b) / b if b else 0.0
+            ok = c >= (1.0 - threshold) * b
+            if not ok:
+                failures.append(
+                    f"{tag}: {c:.1f} vs baseline {b:.1f} "
+                    f"({delta:+.1%} < -{threshold:.0%} gate)")
+            rows.append((tag, b, c, delta, "ok" if ok else "REGRESSED"))
+        for metric in sorted(set(base_i) | set(cur_i)):
+            tag = f"{fname.removeprefix('BENCH_').removesuffix('.json')}" \
+                  f"/{metric}"
+            b, c = base_i.get(metric), cur_i.get(metric)
+            delta = ((c - b) / b) if (b and c is not None) else None
+            rows.append((tag, b, c, delta, "info"))
+    return rows, failures
+
+
+def render(rows: list[tuple]) -> str:
+    def num(x):
+        return "-" if x is None else f"{x:.2f}"
+
+    def pct(x):
+        return "-" if x is None else f"{x:+.1%}"
+
+    lines = ["| metric | baseline | current | delta | status |",
+             "|---|---:|---:|---:|---|"]
+    for tag, b, c, delta, status in rows:
+        lines.append(f"| {tag} | {num(b)} | {num(c)} | {pct(delta)} "
+                     f"| {status} |")
+    return "\n".join(lines)
+
+
+def update_baselines() -> None:
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    for fname in FILES:
+        src = os.path.join(BENCH_DIR, fname)
+        if not os.path.exists(src):
+            raise SystemExit(f"cannot update baselines: {src} missing "
+                             f"(run `python -m benchmarks.run --only wire`)")
+        shutil.copy(src, os.path.join(BASELINE_DIR, fname))
+        print(f"baseline refreshed: baselines/{fname}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--threshold", type=float, default=THRESHOLD,
+                    help="relative regression that fails the gate")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the current reports over the baselines "
+                         "instead of comparing")
+    args = ap.parse_args()
+    if args.update:
+        update_baselines()
+        return
+    rows, failures = compare(args.threshold)
+    table = render(rows)
+    print(table)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write("## Wire benchmark regression gate\n\n")
+            f.write(table + "\n\n")
+            if failures:
+                f.write("**FAILED:**\n\n")
+                for msg in failures:
+                    f.write(f"- {msg}\n")
+            else:
+                f.write(f"All gated metrics within {args.threshold:.0%} "
+                        f"of baseline.\n")
+    if failures:
+        print("\nbenchmark regression gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"\nbenchmark regression gate passed "
+          f"(threshold {args.threshold:.0%}).")
+
+
+if __name__ == "__main__":
+    main()

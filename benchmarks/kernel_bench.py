@@ -207,7 +207,7 @@ def bench_ingest():
     from repro.core.buffer import Update, UpdateBuffer
     from repro.kernels.seafl_agg.ref import seafl_aggregate_flat_from_params_ref
     from repro.runtime.transport import (
-        IngestSession, encode_update, make_wire_format,
+        IngestBatcher, IngestSession, encode_update, make_wire_format,
     )
 
     rows = []
@@ -241,13 +241,48 @@ def bench_ingest():
                 buf.commit(slot)
             return buf
 
-        def timed(coalesced):
-            ingest_all(coalesced)          # warm the chunk-write jits
-            t0 = time.perf_counter()
-            jax.block_until_ready(ingest_all(coalesced).stacked_flat())
-            return time.perf_counter() - t0
+        def stream_all(batched=False):
+            # the *concurrent* multi-client path: K uploads interleave their
+            # chunk streams — eager (one donated dispatch per chunk) vs the
+            # double-buffered batch queue (one donated scatter per flush)
+            buf = UpdateBuffer(K, P)
+            batcher = IngestBatcher(buf, flush_chunks=16) if batched else None
+            live = []
+            for i, pl in enumerate(payloads):
+                slot = buf.reserve(Update(i, 1, 0, 1))
+                sess = IngestSession(
+                    buf, slot, fmt,
+                    base_flat=base if fmt.delta_coded else None,
+                    batcher=batcher)
+                live.append((sess, slot, list(pl.chunks)))
+            busy = True
+            while busy:                    # round-robin interleave
+                busy = False
+                for sess, _, seq in live:
+                    if seq:
+                        sess.write(seq.pop(0))
+                        busy = True
+            if batcher is not None:
+                batcher.flush()
+            for sess, slot, _ in live:
+                sess.finish()
+                buf.commit(slot)
+            return buf
 
-        dt, dt_co = timed(False), timed(True)
+        def timed(fn, *args):
+            # best-of-3 after a warm-up: these numbers feed the CI
+            # regression gate, so they must not carry single-sample
+            # scheduler noise
+            fn(*args)                      # warm the chunk-write jits
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*args).stacked_flat())
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        dt, dt_co = timed(ingest_all, False), timed(ingest_all, True)
+        dt_se, dt_sb = timed(stream_all, False), timed(stream_all, True)
         wire = sum(pl.nbytes for pl in payloads)
         decoded_mb = K * P * 4 / 2**20     # f32 params landed in the buffer
         ratio = (K * P * 4) / wire
@@ -257,6 +292,10 @@ def bench_ingest():
                      f"({dt / dt_co:.2f}x);wire_bytes={wire};"
                      f"compression={ratio:.2f}x;chunks_per_upload="
                      f"{len(payloads[0].chunks)}"))
+        rows.append((f"ingest/{spec}_stream_batched",
+                     f"{decoded_mb / dt_sb:.0f}",
+                     f"MBps_batched_flush;eager={decoded_mb / dt_se:.0f}MBps"
+                     f"({dt_se / dt_sb:.2f}x);concurrent_clients={K}"))
         report["schemes"][spec] = {
             "wire_bytes": int(wire),
             "wire_bytes_per_update": int(wire // K),
@@ -264,6 +303,9 @@ def bench_ingest():
             "ingest_MBps": round(decoded_mb / dt, 1),
             "ingest_MBps_coalesced": round(decoded_mb / dt_co, 1),
             "coalesce_speedup": round(dt / dt_co, 2),
+            "stream_eager_MBps": round(decoded_mb / dt_se, 1),
+            "stream_batched_MBps": round(decoded_mb / dt_sb, 1),
+            "batch_flush_speedup": round(dt_se / dt_sb, 2),
         }
 
     # bf16 buffer mode: HBM halves, aggregation parity stays <= 1e-2
@@ -323,9 +365,11 @@ def bench_dispatch():
         pay = delta if not delta.full else full
         base = held if not delta.full else None
         apply_dispatch(pay, sess.fmt, base)         # warm decode jits
-        t0 = time.perf_counter()
-        jax.block_until_ready(apply_dispatch(pay, sess.fmt, base))
-        dt = time.perf_counter() - t0
+        dt = float("inf")                           # best-of-3: gated in CI
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(apply_dispatch(pay, sess.fmt, base))
+            dt = min(dt, time.perf_counter() - t0)
         mb = P * 4 / 2**20
         rows.append((f"dispatch/{spec}", f"{mb / dt:.0f}",
                      f"MBps_decode_apply;full_bytes={full.nbytes};"
@@ -338,6 +382,45 @@ def bench_dispatch():
                 round(4 * P / delta.nbytes, 3) if not delta.full else None,
             "apply_MBps": round(mb / dt, 1),
         }
+
+    # encode-cache amortisation: one shared hop fanned out to a cohort of
+    # clients all holding the same base version (SEAFL's semi-async common
+    # case) — per-client encode vs one encode + cached byte-identical chunks
+    fanout = 32
+    enc_report = {}
+    for spec in ["topk:0.1", "int8"]:
+        fmt = make_wire_format(spec, 1 << 16)
+        per_client = {}
+        for cached in (False, True):
+            sess = DispatchSession(fmt, history=4, use_cache=cached)
+            for cid in range(fanout):
+                sess.versions[cid] = 2          # whole cohort holds v2
+
+            def encode_all():
+                sess.invalidate_cache()         # cold: 1 miss + N-1 hits
+                ps = [sess.encode(cid, 3, ring) for cid in range(fanout)]
+                jax.block_until_ready(
+                    [l for p in ps for c in p.chunks
+                     for l in jax.tree.leaves(c.payload)])
+                return ps
+
+            encode_all()                        # warm the encode jits
+            t0 = time.perf_counter()
+            encode_all()
+            per_client[cached] = (time.perf_counter() - t0) / fanout * 1e6
+        speedup = per_client[False] / per_client[True]
+        rows.append((f"dispatch/encode_cache_{spec}",
+                     f"{per_client[True]:.0f}",
+                     f"us_per_client_amortized;per_client_encode="
+                     f"{per_client[False]:.0f}us;speedup={speedup:.1f}x;"
+                     f"fanout={fanout}"))
+        enc_report[spec] = {
+            "fanout_clients": fanout,
+            "encode_us_per_client": round(per_client[False], 1),
+            "encode_us_per_client_amortized": round(per_client[True], 1),
+            "amortized_speedup": round(speedup, 2),
+        }
+    report["encode_cache"] = enc_report
 
     # delta-hit rate vs ring depth: a real (tiny) fleet under the simulator —
     # deeper rings let stale returning clients still receive deltas
@@ -360,14 +443,21 @@ def bench_dispatch():
         d = sim.server.dispatch
         total = d.full_dispatches + d.delta_dispatches
         hit = d.delta_dispatches / max(total, 1)
+        cache = d.cache_info()
         rows.append((f"dispatch/hit_rate_depth{depth}", f"{hit:.2f}",
                      f"delta={d.delta_dispatches};full={d.full_dispatches};"
-                     f"down_bytes={sim.server.bytes_downloaded}"))
+                     f"down_bytes={sim.server.bytes_downloaded};"
+                     f"encode_cache_hit_rate={cache['hit_rate']:.2f};"
+                     f"resyncs={cache['resyncs']}"))
         report["delta_hit_rate"][str(depth)] = {
             "rate": round(hit, 3),
             "delta": int(d.delta_dispatches),
             "full": int(d.full_dispatches),
             "bytes_downloaded": int(sim.server.bytes_downloaded),
+            "encode_cache_hit_rate": round(cache["hit_rate"], 3),
+            "encode_cache_hits": cache["hits"],
+            "encode_cache_misses": cache["misses"],
+            "resyncs": cache["resyncs"],
         }
 
     with open(BENCH_DISPATCH_JSON, "w") as f:

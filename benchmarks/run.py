@@ -7,8 +7,14 @@ Prints ``name,value,derived`` CSV.  Sections:
                                     roofline accounting
   roofline/*                      — per (arch x shape) roofline terms from
                                     the multi-pod dry-run artifacts
+  ingest/* + dispatch/*           — wire-path benchmarks (--only wire): the
+                                    subset CI's regression gate runs; both
+                                    local runs and the `ingest-bench` job go
+                                    through this one entrypoint so their
+                                    numbers come from the same code path
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only figs|kernels|roofline]
+Usage: PYTHONPATH=src python -m benchmarks.run \
+           [--only figs|kernels|roofline|wire]
 """
 from __future__ import annotations
 
@@ -20,12 +26,29 @@ import traceback
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=["figs", "kernels", "roofline"],
+    ap.add_argument("--only", choices=["figs", "kernels", "roofline", "wire"],
                     default=None)
     args = ap.parse_args()
     print("name,value,derived")
 
     t0 = time.time()
+    if args.only == "wire":
+        from benchmarks.kernel_bench import bench_dispatch, bench_ingest
+        failed = False
+        for bench in (bench_ingest, bench_dispatch):
+            try:
+                for name, value, derived in bench():
+                    print(f"{name},{value},{derived}", flush=True)
+            except Exception as e:
+                traceback.print_exc()
+                print(f"{bench.__name__},ERROR,{type(e).__name__}",
+                      flush=True)
+                failed = True
+        print(f"total_benchmark_wall_seconds,{time.time() - t0:.1f},",
+              flush=True)
+        if failed:
+            sys.exit(1)       # a broken bench must fail the CI gate loudly
+        return
     if args.only in (None, "figs"):
         from benchmarks.paper_figs import ALL_FIGS
         for fig in ALL_FIGS:

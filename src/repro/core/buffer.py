@@ -21,6 +21,9 @@ concurrent streams may finish — or die — in any order):
   ``reserve(meta) -> slot``    claim a free row (grows past K under SEAFL
                                sync-wait spill);
   ``write_range(slot, off, v)``  donated chunk write into that row;
+  ``write_batch(items)``       one donated scatter landing many queued
+                               (slot, start, vals) chunk writes at once —
+                               the IngestBatcher flush path;
   ``commit(slot)``             the upload completed; the slot joins the
                                committed sequence (arrival order);
   ``release(slot)``            the upload died mid-stream; the row returns
@@ -49,6 +52,22 @@ def _write_range(buf: jnp.ndarray, slot: jnp.ndarray, start: jnp.ndarray,
     """In-place (donated) write of one chunk into row ``slot`` at ``start``."""
     return jax.lax.dynamic_update_slice(
         buf, vals.astype(buf.dtype)[None, :], (slot, start))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _write_batch(buf: jnp.ndarray, slots: jnp.ndarray, starts: jnp.ndarray,
+                 vals: jnp.ndarray):
+    """One donated scatter applying a whole batch of equal-length chunk
+    writes — ``vals[i]`` lands in row ``slots[i]`` at element ``starts[i]``.
+    The sequential fori_loop keeps same-slot writes in enqueue order (they
+    are disjoint windows anyway) and fuses into a single device dispatch."""
+    vals = vals.astype(buf.dtype)
+
+    def body(i, b):
+        row = jax.lax.dynamic_index_in_dim(vals, i, keepdims=True)
+        return jax.lax.dynamic_update_slice(b, row, (slots[i], starts[i]))
+
+    return jax.lax.fori_loop(0, slots.shape[0], body, buf)
 
 
 @dataclass
@@ -137,6 +156,27 @@ class UpdateBuffer:
         """Donated write of ``vals`` into row ``slot`` at element ``start``."""
         self._buf = _write_range(self._buf, jnp.int32(slot),
                                  jnp.int32(start), vals)
+
+    def write_batch(self, items: list) -> None:
+        """One donated scatter applying many ``(slot, start, vals)`` chunk
+        writes at once — the batched-ingest hot path (IngestBatcher flushes
+        land here).  All ``vals`` must share one length; the batch is padded
+        to the next power of two by *repeating its last entry* (an
+        idempotent duplicate write), so the jit cache holds O(log B) batch
+        shapes instead of one per batch size."""
+        if not items:
+            return
+        if len(items) == 1:
+            slot, start, vals = items[0]
+            self.write_range(slot, start, vals)
+            return
+        n = len(items)
+        target = 1 << (n - 1).bit_length()
+        items = items + [items[-1]] * (target - n)
+        slots = jnp.asarray([s for s, _, _ in items], jnp.int32)
+        starts = jnp.asarray([o for _, o, _ in items], jnp.int32)
+        vals = jnp.stack([v for _, _, v in items])
+        self._buf = _write_batch(self._buf, slots, starts, vals)
 
     def commit(self, slot: int) -> None:
         """The upload for ``slot`` completed; make it visible to readers.

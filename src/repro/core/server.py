@@ -18,7 +18,11 @@ Hot path: every algorithm aggregates through the flat (K, P) buffer engine
 with flat error feedback), and ``begin_ingest``/``ingest_chunk``/
 ``finish_ingest`` decode each chunk straight into the reserved (K, P) buffer
 slot — no host pytree staging, no transient delta pytree, no (P,) reassembly
-buffer.  The Eq. (5) cosine terms are recovered delta-free in the kernels and
+buffer; concurrent streams coalesce their chunk writes through a shared
+``IngestBatcher`` (one donated scatter per flush, bit-identical commits).
+Downlink dispatches go through the multicast ``DispatchSession``: delta
+hits on a shared held version are encoded once and fanned out from a
+bounded encode cache (runtime/dispatch.py).  The Eq. (5) cosine terms are recovered delta-free in the kernels and
 model versions live in ``_history`` as flat (P,) f32 buffers, unpacked lazily
 only at dispatch / eval / checkpoint boundaries.  The buffer itself can store
 slots in bf16 (``FLConfig.buffer_dtype``) at half the HBM; the kernels
@@ -38,7 +42,7 @@ from repro.core.aggregation import SeaflHyper
 from repro.core.buffer import Update, UpdateBuffer
 from repro.runtime.dispatch import DispatchPayload, DispatchSession
 from repro.runtime.transport import (
-    Chunk, FlatErrorFeedback, IngestSession, UploadPayload,
+    Chunk, FlatErrorFeedback, IngestBatcher, IngestSession, UploadPayload,
     encode_update as transport_encode_update, make_wire_format,
 )
 from repro.core.packer import ParamPacker
@@ -80,6 +84,17 @@ class FLConfig:
     dispatch_compression: Optional[str] = None
     dispatch_history: int = 8        # global-history ring depth (versions)
     dispatch_chunk_elems: int = 1 << 16   # downlink chunk granularity
+    # multicast wire engine: delta hits encode the pure ring hop once per
+    # (base, target) and fan cached chunks out byte-identically; a client
+    # whose accumulated EF residual exceeds dispatch_resync x |hop delta|
+    # gets one personalized fold-in encode (False restores per-client
+    # fold-in on every delta — the pre-multicast semantics)
+    dispatch_multicast: bool = True
+    dispatch_resync: float = 4.0
+    # streaming-ingest batch queue: coalesce up to this many pending chunk
+    # writes across concurrent uploads into one donated scatter per flush
+    # (0 = eager, one device dispatch per chunk — the pre-batching path)
+    ingest_batch_chunks: int = 16
     seed: int = 0
 
     def hyper(self) -> SeaflHyper:
@@ -118,10 +133,14 @@ class SeaflServer:
             self.dispatch = DispatchSession(
                 make_wire_format(cfg.dispatch_compression,
                                  cfg.dispatch_chunk_elems),
-                cfg.dispatch_history)
+                cfg.dispatch_history,
+                multicast=cfg.dispatch_multicast,
+                resync=cfg.dispatch_resync)
         self._buffer_dtype = BUFFER_DTYPES[cfg.buffer_dtype]
         self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size,
                                    dtype=self._buffer_dtype)
+        self._batcher = (IngestBatcher(self.buffer, cfg.ingest_batch_chunks)
+                         if cfg.ingest_batch_chunks > 0 else None)
         self.client_sizes = client_sizes
         self.active: dict[int, int] = {}         # cid -> version t_k
         self.idle: set[int] = set(client_sizes)
@@ -176,6 +195,9 @@ class SeaflServer:
         self._history = {v: p for v, p in self._history.items() if v in live}
         self._unpack_cache = {v: p for v, p in self._unpack_cache.items()
                               if v in live}
+        if self.dispatch is not None:
+            # encode-cache entries age out with the ring they index into
+            self.dispatch.age_cache(self.round)
 
     def _sample_idle(self, k: int) -> list[int]:
         pool = sorted(self.idle)
@@ -258,7 +280,8 @@ class SeaflServer:
             return DispatchPayload(
                 cid=cid, target_version=target, base_version=None,
                 scheme="raw", param_size=self.packer.size, chunks=None,
-                nbytes=4 * self.packer.size)
+                nbytes=4 * self.packer.size,
+                encode_cost_bytes=4 * self.packer.size)
         return self.dispatch.encode(cid, target, self._history,
                                     materialize=materialize)
 
@@ -317,7 +340,8 @@ class SeaflServer:
             client_id=cid, n_samples=self.client_sizes[cid], version=version,
             n_epochs=n_epochs, recv_time=recv_time))
         sess = IngestSession(self.buffer, slot, self.wire, base,
-                             param_size=self.packer.size)
+                             param_size=self.packer.size,
+                             batcher=self._batcher)
         self._ingests[cid] = sess
         return sess
 
@@ -329,6 +353,10 @@ class SeaflServer:
         session is discarded and its reserved buffer slot is recycled."""
         sess = self._ingests.pop(cid, None)
         if sess is not None:
+            if self._batcher is not None:
+                # drop queued-but-unflushed writes so the recycled row can
+                # never be corrupted by a dead client's stale chunks
+                self._batcher.cancel_slot(sess.slot)
             self.buffer.release(sess.slot)
 
     def finish_ingest(self, cid: int,
@@ -344,6 +372,10 @@ class SeaflServer:
         nbytes = sess.finish()           # raises while coverage is incomplete
         del self._ingests[cid]
         self.bytes_uploaded += nbytes
+        if self._batcher is not None:
+            # readers only ever see flushed rows: the slot's queued writes
+            # (and any co-batched neighbours) land before the commit
+            self._batcher.flush()
         self.buffer.commit(sess.slot)
         self.active.pop(cid, None)
         self.idle.add(cid)
@@ -544,6 +576,9 @@ class SeaflServer:
                 self._ef[int(k[2:])] = FlatErrorFeedback(residual)
         self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size,
                                    dtype=self._buffer_dtype)
+        self._batcher = (IngestBatcher(self.buffer,
+                                       self.cfg.ingest_batch_chunks)
+                         if self.cfg.ingest_batch_chunks > 0 else None)
         for i, m in enumerate(state.get("buffer", [])):
             self.buffer.add(
                 Update(client_id=int(m["client_id"]),

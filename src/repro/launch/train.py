@@ -39,7 +39,9 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                 seq_len: int = 64, batch_size: int = 4,
                 shard_seqs: int = 24, local_epochs: int = 2,
                 lr: float = 0.02, seed: int = 0, compression=None,
-                dispatch_compression=None, dispatch_history: int = 8):
+                dispatch_compression=None, dispatch_history: int = 8,
+                dispatch_multicast: bool = True, dispatch_resync: float = 4.0,
+                ingest_batch: int = 16):
     cfg = smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg)
     params0 = model.init(jax.random.PRNGKey(seed))
@@ -79,7 +81,10 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                   local_lr=lr, batch_size=batch_size, seed=seed,
                   compression=compression,
                   dispatch_compression=dispatch_compression,
-                  dispatch_history=dispatch_history)
+                  dispatch_history=dispatch_history,
+                  dispatch_multicast=dispatch_multicast,
+                  dispatch_resync=dispatch_resync,
+                  ingest_batch_chunks=ingest_batch)
     server = SeaflServer(fl, params0, {c.cid: c.n_samples
                                        for c in clients.values()})
 
@@ -115,6 +120,16 @@ def main():
                     help="downlink wire: f32 | bf16 | topk:<r> | int8 "
                          "(default: legacy whole-model broadcast)")
     ap.add_argument("--dispatch-history", type=int, default=8)
+    ap.add_argument("--no-dispatch-multicast", dest="dispatch_multicast",
+                    action="store_false", default=True,
+                    help="disable the shared encode-cache (per-client "
+                         "fold-in encodes on every delta)")
+    ap.add_argument("--dispatch-resync", type=float, default=4.0,
+                    help="residual/|hop delta| ratio that forces a "
+                         "personalized fold-in re-encode under multicast")
+    ap.add_argument("--ingest-batch", type=int, default=16,
+                    help="streaming-ingest chunk writes coalesced per "
+                         "donated scatter (0 = eager per-chunk writes)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
@@ -127,7 +142,10 @@ def main():
         seq_len=args.seq_len, lr=args.lr, seed=args.seed,
         compression=args.compression,
         dispatch_compression=args.dispatch_compression,
-        dispatch_history=args.dispatch_history)
+        dispatch_history=args.dispatch_history,
+        dispatch_multicast=args.dispatch_multicast,
+        dispatch_resync=args.dispatch_resync,
+        ingest_batch=args.ingest_batch)
 
     ck = None
     if args.ckpt_dir:
@@ -163,7 +181,9 @@ def main():
     disp = server.dispatch
     disp_note = "" if disp is None else (
         f", dispatch_full={disp.full_dispatches}"
-        f", dispatch_delta={disp.delta_dispatches}")
+        f", dispatch_delta={disp.delta_dispatches}"
+        f", encode_cache_hit_rate={disp.cache_info()['hit_rate']:.2f}"
+        f", resyncs={disp.resync_dispatches}")
     print(f"[train] done: {server.round} rounds, "
           f"{server.total_aggregations} aggregations, "
           f"uplink_bytes={server.bytes_uploaded}, "

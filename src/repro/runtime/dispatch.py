@@ -1,4 +1,4 @@
-"""Downlink dispatch: version-tracked, delta-coded model broadcast.
+"""Downlink dispatch: version-tracked, delta-coded, multicast model broadcast.
 
 The uplink transport (runtime/transport.py) made client->server payloads a
 first-class wire object; this module is its mirror for the server->client
@@ -24,15 +24,38 @@ client, or one whose version aged out of the ring receives a **full
 snapshot** as raw f32 chunks (exact, and it resets the error-feedback
 residual).
 
-Error feedback makes lossy deltas convergent: the server models the client's
-held state as ``ring[held] - residual`` (what the wire dropped so far), folds
-the residual into the next delta, and updates it from what the wire actually
-delivered — the same :class:`~repro.runtime.transport.FlatErrorFeedback`
-algebra as the uplink, run on the server because in this direction the
-server is the encoder.  The residual commits only at *delivery*
-(``deliver``): a payload that dies on the wire (client crash inside the
-dispatch window) leaves no trace, the client's tracking state is dropped,
-and its next dispatch is a full snapshot — the re-request path.
+Multicast encode cache
+----------------------
+
+SEAFL's semi-asynchronous rounds make many clients return on the *same*
+held version (at ring depth 8 the delta-hit population is ~80% of
+dispatches — BENCH_dispatch.json), so per-client encoding is O(fleet)
+redundant work.  In multicast mode (the default) a delta hit encodes the
+**pure ring hop** ``ring[target] - ring[base]`` — no per-client state enters
+the wire — exactly once per ``(base_version, target_version, scheme, ratio,
+chunk_elems)``; every other client on the same hop fans out the cached
+chunks byte-identically.  Cache entries die with the ring (aging evicts any
+entry whose base or target left the retained window) and are never
+checkpointed: a restored session starts cold and simply re-encodes —
+byte-identically, since the ring and residuals are restored.
+
+Error feedback under shared payloads: the per-client residual keeps its
+invariant — the client holds ``ring[version] - residual`` — but instead of
+folding the residual into the wire (which would make every payload
+client-specific), delivery *accumulates* the shared encode error:
+``r' = r + (hop_delta - decoded)``.  Accumulation is a random walk, so a
+client whose residual outgrows the hop (``|r| > dispatch_resync * |delta|``)
+is **resynced** with a personalized fold-in encode — the classic EF payload
+``delta + r``, same wire bytes, cache-bypassed — which re-ships the
+accumulated error and pulls the residual back to the EF equilibrium band.
+``multicast=False`` restores the pre-multicast per-client fold-in semantics
+on every delta.  Both modes maintain the same ``held_flat`` algebra, so
+checkpoints are interchangeable across them.
+
+The residual commits only at *delivery* (``deliver``): a payload that dies
+on the wire (client crash inside the dispatch window) leaves no trace, the
+client's tracking state is dropped, and its next dispatch is a full
+snapshot — the re-request path.
 
 Everything here is flat-space: deltas, reconstruction, and the held-state
 algebra all operate on the packed (P,) vector; ``ParamPacker.unpack`` runs
@@ -71,9 +94,17 @@ class DispatchPayload:
     (``DispatchSession.encode(materialize=False)``): the content is exactly
     a ring entry, only ``nbytes`` is meaningful.
 
-    ``residual`` is server-side bookkeeping, not wire payload: the error-
-    feedback carry that becomes the client's tracked residual if — and only
-    if — the payload is delivered.
+    ``residual`` is server-side bookkeeping, not wire payload.  On a
+    personalized (``shared=False``) delta it is the absolute error-feedback
+    carry that *replaces* the client's tracked residual at delivery; on a
+    multicast (``shared=True``) delta it is the shared encode error of the
+    pure ring hop, *added to* the client's residual at delivery — the same
+    array object fans out with the cached chunks to every co-held client.
+
+    ``encode_cost_bytes`` is the f32 source bytes this encode actually
+    processed server-side: 4*P for any fresh encode (full, personalized, or
+    a cache miss), 0 for a cache hit.  The simulator's encode-time model
+    prices it; the wire bytes (``nbytes``) are unchanged by caching.
     """
     cid: int
     target_version: int
@@ -83,6 +114,9 @@ class DispatchPayload:
     chunks: Optional[list[Chunk]]
     nbytes: int
     residual: Optional[jnp.ndarray] = None
+    shared: bool = False
+    resync: bool = False
+    encode_cost_bytes: int = 0
 
     @property
     def full(self) -> bool:
@@ -118,20 +152,57 @@ class DispatchSession:
     — tracking commits in ``deliver`` so an undelivered payload (crash
     inside the dispatch window) costs nothing and forces a full-snapshot
     re-request via ``drop``.
+
+    ``multicast`` enables the shared-hop encode semantics and the bounded
+    encode cache (see module docstring); ``use_cache=False`` keeps the
+    multicast semantics but re-encodes every payload — a testing/benchmark
+    knob proving the cache is a pure amortisation (bit-identical payloads,
+    residuals equal to the per-client-encode path).
     """
 
-    def __init__(self, fmt: WireFormat, history: int):
+    def __init__(self, fmt: WireFormat, history: int,
+                 multicast: bool = True, resync: float = 4.0,
+                 use_cache: bool = True):
         self.fmt = fmt
         self.history = max(1, int(history))
+        self.multicast = bool(multicast)
+        self.resync = float(resync)
+        self.use_cache = bool(use_cache)
         self.versions: dict[int, int] = {}       # cid -> held global version
         self.residuals: dict[int, jnp.ndarray] = {}   # delta schemes only
         self.full_dispatches = 0
         self.delta_dispatches = 0
+        self.resync_dispatches = 0
+        # (base, target, scheme, ratio, chunk_elems) ->
+        #     (chunks, shared_err, nbytes); bounded by ring aging (both
+        # versions must stay in the retained window), never checkpointed
+        self._cache: dict[tuple, tuple] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     # ---------------------------------------------------------------- wire
     def ring_versions(self, current: int) -> set[int]:
         """Versions the bounded ring retains at global version ``current``."""
         return {current - i for i in range(self.history) if current - i >= 0}
+
+    def age_cache(self, current: int) -> None:
+        """Ring aging: evict every cache entry whose base or target version
+        left the retained window (its chunks can never be served again)."""
+        if not self._cache:
+            return
+        live = self.ring_versions(current)
+        self._cache = {
+            k: v for k, v in self._cache.items()
+            if (k[0] is None or k[0] in live) and k[1] in live
+        }
+
+    def invalidate_cache(self) -> None:
+        """Drop every cached encode (checkpoint restore starts cold)."""
+        self._cache = {}
+
+    def _cache_key(self, base: Optional[int], target: int) -> tuple:
+        f = self.fmt
+        return (base, target, f.scheme, f.topk_ratio, f.chunk_elems)
 
     def encode(self, cid: int, target: int,
                ring: dict[int, jnp.ndarray],
@@ -139,15 +210,21 @@ class DispatchSession:
         """Encode one dispatch of global version ``target`` to ``cid``.
 
         ``ring`` maps version -> flat (P,) global (the server's
-        ``_history``).  Does not mutate tracking state.
+        ``_history``).  Does not mutate tracking state (the encode cache and
+        its hit/miss counters are amortisation bookkeeping, not protocol
+        state).
 
         ``materialize=False`` skips building the actual wire chunks for
         *raw/full* payloads (their byte size has a closed form and their
         content is exactly a ring entry), which is all the event simulator
         needs — it prices ``nbytes`` and reconstructs training bases from
-        the ring, never from the chunks.  Delta payloads always
-        materialize: the error-feedback residual is defined by what the
-        encoded wire actually delivers.
+        the ring, never from the chunks.  Lazy fulls still go through the
+        cache in multicast mode so the encode-*time* accounting amortises
+        like the materialized engine (a chunk-less sentinel entry marks the
+        target as already serialised; a later materialized request upgrades
+        it, paying the chunk build it actually performs).  Delta payloads
+        always materialize: the error-feedback residual is defined by what
+        the encoded wire actually delivers.
         """
         g = ring[target]
         fmt = self.fmt
@@ -155,28 +232,104 @@ class DispatchSession:
         usable = (held is not None and held in ring
                   and held in self.ring_versions(target))
         if fmt.delta_coded and usable:
-            delta = g - ring[held]
             r = self.residuals.get(cid)
+            p = int(g.shape[0])
+            delta = None
+            if self.multicast:
+                key = self._cache_key(held, target)
+                self.age_cache(target)
+                ent = self._cache.get(key) if self.use_cache else None
+                # resync decision: a pure cache hit never materialises the
+                # delta — its norm rides in the cache entry, so the fan-out
+                # hot path pays one norm sync for the residual, not two
+                # reductions plus a (P,) subtraction per client
+                if r is None:
+                    needs_resync = False
+                elif self.resync <= 0.0:
+                    needs_resync = True
+                else:
+                    if ent is not None:
+                        dnorm = ent[3]
+                    else:
+                        delta = g - ring[held]
+                        dnorm = float(jnp.linalg.norm(delta))
+                    needs_resync = float(jnp.linalg.norm(r)) > \
+                        self.resync * dnorm + 1e-12
+                if not needs_resync:
+                    if ent is not None:
+                        self.cache_hits += 1
+                        chunks, err, nbytes, _ = ent
+                        cost = 0
+                    else:
+                        if delta is None:
+                            delta = g - ring[held]
+                        chunks = encode_flat(delta, fmt)
+                        err = delta - decode_concat(chunks, fmt) \
+                            if p else None
+                        nbytes = sum(c.nbytes for c in chunks)
+                        if self.use_cache:
+                            self._cache[key] = (
+                                chunks, err, nbytes,
+                                float(jnp.linalg.norm(delta)) if p else 0.0)
+                        self.cache_misses += 1
+                        cost = 4 * p
+                    return DispatchPayload(
+                        cid=cid, target_version=target, base_version=held,
+                        scheme=fmt.scheme, param_size=p, chunks=chunks,
+                        nbytes=nbytes, residual=err, shared=True,
+                        encode_cost_bytes=cost)
+            # personalized fold-in encode: multicast off, or this client's
+            # accumulated residual tripped the resync threshold — same wire
+            # bytes as the shared hop, but the payload re-ships the residual
+            if delta is None:
+                delta = g - ring[held]
             vec = delta if r is None else delta + r
             chunks = encode_flat(vec, fmt)
             residual = vec - decode_concat(chunks, fmt) \
                 if int(vec.shape[0]) else None
             return DispatchPayload(
                 cid=cid, target_version=target, base_version=held,
-                scheme=fmt.scheme, param_size=int(g.shape[0]), chunks=chunks,
-                nbytes=sum(c.nbytes for c in chunks), residual=residual)
+                scheme=fmt.scheme, param_size=p, chunks=chunks,
+                nbytes=sum(c.nbytes for c in chunks), residual=residual,
+                shared=False, resync=(self.multicast and r is not None),
+                encode_cost_bytes=4 * p)
         # full snapshot: raw schemes ship themselves; delta schemes fall
         # back to exact raw f32 (a lossy top-k of the *whole model* would be
         # meaningless for a client with no base)
         full_fmt = fmt if not fmt.delta_coded else replace(fmt, scheme="f32")
         p = int(g.shape[0])
+        closed_form = (full_fmt.payload_bytes(p) if p
+                       else CHUNK_HEADER_BYTES)
+        if self.multicast:
+            key = self._cache_key(None, target)
+            self.age_cache(target)
+            ent = self._cache.get(key) if self.use_cache else None
+            # a sentinel (chunk-less) entry satisfies lazy requests; a
+            # materialized request needs real chunks and upgrades it
+            if ent is not None and (not materialize or ent[0] is not None):
+                self.cache_hits += 1
+                return DispatchPayload(
+                    cid=cid, target_version=target, base_version=None,
+                    scheme=full_fmt.scheme, param_size=p,
+                    chunks=(ent[0] if materialize else None),
+                    nbytes=ent[2], shared=True, encode_cost_bytes=0)
+            chunks = encode_flat(g, full_fmt) if materialize else None
+            nbytes = (sum(c.nbytes for c in chunks) if chunks is not None
+                      else closed_form)
+            if self.use_cache:
+                self._cache[key] = (chunks, None, nbytes, None)
+            self.cache_misses += 1
+            return DispatchPayload(
+                cid=cid, target_version=target, base_version=None,
+                scheme=full_fmt.scheme, param_size=p, chunks=chunks,
+                nbytes=nbytes, shared=True, encode_cost_bytes=4 * p)
         chunks = encode_flat(g, full_fmt) if materialize else None
         return DispatchPayload(
             cid=cid, target_version=target, base_version=None,
             scheme=full_fmt.scheme, param_size=p, chunks=chunks,
             nbytes=(sum(c.nbytes for c in chunks) if chunks is not None
-                    else (full_fmt.payload_bytes(p) if p
-                          else CHUNK_HEADER_BYTES)))
+                    else closed_form),
+            encode_cost_bytes=4 * p)
 
     # ------------------------------------------------------------- tracking
     def deliver(self, payload: DispatchPayload) -> None:
@@ -188,11 +341,19 @@ class DispatchSession:
             self.full_dispatches += 1
         else:
             self.delta_dispatches += 1
+            if payload.resync:
+                self.resync_dispatches += 1
         self.versions[cid] = payload.target_version
         if payload.full or payload.residual is None:
             # full snapshots reset error memory (f32 is exact; bf16 is a
             # fresh base-free rounding either way)
             self.residuals.pop(cid, None)
+        elif payload.shared:
+            # multicast hop: the shared encode error joins this client's
+            # accumulated residual (held' = ring[target] - r')
+            r = self.residuals.get(cid)
+            self.residuals[cid] = payload.residual if r is None \
+                else r + payload.residual
         else:
             self.residuals[cid] = payload.residual
 
@@ -208,7 +369,8 @@ class DispatchSession:
 
         f32 holds the ring version exactly; bf16 holds its bf16 rounding;
         delta schemes hold ``ring[version] - residual`` — the error-feedback
-        invariant, so the server never stores per-client (P,) models, only
+        invariant (identical under multicast accumulation and personalized
+        fold-in), so the server never stores per-client (P,) models, only
         residuals (and only for clients that actually received deltas).
         """
         v = self.versions[cid]
@@ -218,16 +380,33 @@ class DispatchSession:
         r = self.residuals.get(cid)
         return g if r is None else g - r
 
+    # ----------------------------------------------------------- telemetry
+    def cache_info(self) -> dict:
+        """Encode-cache amortisation stats for benches and the train CLI."""
+        lookups = self.cache_hits + self.cache_misses
+        return {
+            "hits": int(self.cache_hits),
+            "misses": int(self.cache_misses),
+            "hit_rate": (self.cache_hits / lookups) if lookups else 0.0,
+            "entries": len(self._cache),
+            "resyncs": int(self.resync_dispatches),
+        }
+
     # ----------------------------------------------------------- checkpoint
     def state_dict(self) -> dict:
         # the ring depth is deliberately not persisted: restoring under a
         # different dispatch_history is benign (out-of-ring holders just
-        # fall back to full snapshots), unlike a scheme change
+        # fall back to full snapshots), unlike a scheme change.  The encode
+        # cache is never persisted — a restored session re-encodes cold and
+        # byte-identically (ring + residuals are restored).
         return {
             "scheme": self.fmt.scheme,
             "versions": {str(c): int(v) for c, v in self.versions.items()},
             "full_dispatches": int(self.full_dispatches),
             "delta_dispatches": int(self.delta_dispatches),
+            "resync_dispatches": int(self.resync_dispatches),
+            "cache_hits": int(self.cache_hits),
+            "cache_misses": int(self.cache_misses),
         }
 
     def residual_trees(self) -> dict:
@@ -240,7 +419,11 @@ class DispatchSession:
                          for c, v in state.get("versions", {}).items()}
         self.full_dispatches = int(state.get("full_dispatches", 0))
         self.delta_dispatches = int(state.get("delta_dispatches", 0))
+        self.resync_dispatches = int(state.get("resync_dispatches", 0))
+        self.cache_hits = int(state.get("cache_hits", 0))
+        self.cache_misses = int(state.get("cache_misses", 0))
         self.residuals = {
             int(k[2:]): jnp.asarray(v, jnp.float32)
             for k, v in trees.items() if k.startswith("dr")
         }
+        self.invalidate_cache()

@@ -65,6 +65,13 @@ class SimConfig:
     up_mbps: float = 20.0              # fastest-client uplink, megabits/s
     down_mbps: float = 100.0           # fastest-client downlink, megabits/s
     bandwidth_pareto_shape: float = 1.5
+    # --- server-side dispatch *encode* throughput, megabits/s of f32
+    # source processed (0 = free, the legacy timing).  Charged per dispatch
+    # from the payload's actual encode work: a fresh encode (full snapshot,
+    # personalized resync, or multicast cache miss) processes 4*P source
+    # bytes; a multicast cache hit costs nothing — so the encode cache
+    # changes server encode *time* accounting, never wire bytes.
+    encode_mbps: float = 0.0
     fail_prob: float = 0.0             # per-dispatch crash probability
     recover_after: float = 30.0
     seed: int = 0
@@ -108,6 +115,7 @@ class FLSimulation:
         self._inflight: dict[int, InFlight] = {}
         self._delivering: dict[int, _Event] = {}   # cid -> pending deliver
         self.now = 0.0
+        self.encode_seconds = 0.0      # cumulative server encode time spent
         self.history: list[dict] = []
         # per-client static speed multiplier (Pareto heavy tail, paper §VI)
         self._speed = {
@@ -165,6 +173,15 @@ class FLSimulation:
             t += wire_bytes / self._up_bw[cid]
         return t
 
+    def _encode_time(self, payload) -> float:
+        """Server-side encode cost of one dispatch payload: the f32 source
+        bytes this encode actually processed over the configured encode
+        rate.  Multicast cache hits report zero cost — amortisation the
+        wire-byte model can't see."""
+        if self.cfg.encode_mbps <= 0 or not payload.encode_cost_bytes:
+            return 0.0
+        return payload.encode_cost_bytes * 8.0 / (self.cfg.encode_mbps * 1e6)
+
     def _push(self, time: float, kind: str, **data) -> _Event:
         ev = _Event(time, next(self._seq), kind, data)
         heapq.heappush(self._heap, ev)
@@ -176,7 +193,9 @@ class FLSimulation:
         # raw/full payload chunks are never read here (the training base is
         # reconstructed server-side), so skip materialising them
         payload = self.server.encode_dispatch(cid, materialize=False)
-        t0 = self.now + self._down_time(cid, payload.nbytes)
+        enc = self._encode_time(payload)
+        self.encode_seconds += enc
+        t0 = self.now + enc + self._down_time(cid, payload.nbytes)
         ends, t = [], t0
         for _ in range(E):
             t += self._epoch_time(cid)
@@ -281,6 +300,7 @@ class FLSimulation:
                "staleness_max": float(np.max(agg.staleness)),
                "bytes": int(self.server.bytes_uploaded),
                "bytes_down": int(self.server.bytes_downloaded),
+               "encode_s": self.encode_seconds,
                "loss": last_loss}
         if self.eval_fn is not None and (agg.round % self.eval_every == 0):
             rec["acc"] = float(self.eval_fn(self.server.params))

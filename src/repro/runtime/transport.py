@@ -6,6 +6,10 @@ update is serialised as a sequence of fixed-size chunks of the flat ``(P,)``
 ``ParamPacker`` vector, and the server decodes each chunk straight into its
 ``(K, P)`` buffer slot (``IngestSession``) — no host pytree staging, no
 transient delta pytree, no (P,)-sized reassembly buffer on the server.
+With many uploads concurrently in flight, sessions route their chunk
+writes through a shared :class:`IngestBatcher` (one donated scatter per
+flush instead of one device dispatch per chunk) — committed slots stay
+bit-identical to the eager path.
 
 Wire schemes (``WireFormat.scheme``):
 
@@ -48,6 +52,7 @@ __all__ = [
     "encode_update",
     "FlatErrorFeedback",
     "UploadPayload",
+    "IngestBatcher",
     "IngestSession",
 ]
 
@@ -281,19 +286,80 @@ def encode_update(cid: int, version: int, n_epochs: int,
 
 # --------------------------------------------------------------- server side
 
+class IngestBatcher:
+    """Double-buffered batch queue for the multi-client streaming path.
+
+    The eager streaming path issues one donated device dispatch per wire
+    chunk; with many uploads in flight (SEAFL's semi-async premise) that is
+    O(fleet x chunks) dispatch overhead for writes that could land
+    together.  Sessions enqueue their decoded, base-added chunk writes
+    here instead; a *flush* swaps the fill queue out (the next batch
+    accumulates while the flushed scatter's device work is still in flight
+    — JAX dispatch is async, so the swap is the double buffer) and lands the
+    whole batch with one donated scatter per chunk-length group
+    (``UpdateBuffer.write_batch``).  In steady state there are at most two
+    lengths: full chunks and tails.
+
+    Correctness contract: committed slots are bit-identical to the eager
+    per-chunk path (same decode, same base add, same destination windows —
+    rows are disjoint across sessions and in-order within one).  The
+    server flushes before any ``commit`` so readers only ever see flushed
+    rows, and ``cancel_slot`` drops a dead upload's queued writes so a
+    recycled row can never be corrupted by a stale write.
+    """
+
+    def __init__(self, buffer, flush_chunks: int = 16):
+        self.buffer = buffer
+        self.flush_chunks = max(1, int(flush_chunks))
+        self._fill: list[tuple[int, int, jnp.ndarray]] = []
+        self.flushes = 0
+        self.chunks_batched = 0
+        self.writes_issued = 0       # donated scatters actually dispatched
+
+    @property
+    def pending(self) -> int:
+        return len(self._fill)
+
+    def enqueue(self, slot: int, start: int, vals: jnp.ndarray) -> None:
+        self._fill.append((slot, start, vals))
+        if len(self._fill) >= self.flush_chunks:
+            self.flush()
+
+    def cancel_slot(self, slot: int) -> None:
+        """Drop queued writes for a dead upload before its row is recycled."""
+        self._fill = [w for w in self._fill if w[0] != slot]
+
+    def flush(self) -> None:
+        if not self._fill:
+            return
+        batch, self._fill = self._fill, []     # swap, then dispatch
+        groups: dict[int, list] = {}
+        for slot, start, vals in batch:
+            groups.setdefault(int(vals.shape[0]), []).append(
+                (slot, start, vals))
+        for length in sorted(groups):
+            self.buffer.write_batch(groups[length])
+            self.writes_issued += 1
+        self.flushes += 1
+        self.chunks_batched += len(batch)
+
+
 class IngestSession:
     """Server-side decoder for one in-flight upload.
 
     Each wire chunk is decoded and written straight into the reserved
-    ``(K, P)`` buffer slot with a donated dynamic-update — the server never
-    stages the update as a host pytree or a transient (P,) staging vector.
-    Chunks must arrive in order (start == bytes ingested so far), which the
-    sequential wire framing guarantees.
+    ``(K, P)`` buffer slot — with a donated dynamic-update in eager mode, or
+    enqueued on the shared :class:`IngestBatcher` (one donated scatter per
+    flush, coalesced across concurrent clients) in batched mode.  The server
+    never stages the update as a host pytree or a transient (P,) staging
+    vector.  Chunks must arrive in order (start == bytes ingested so far),
+    which the sequential wire framing guarantees.
     """
 
     def __init__(self, buffer, slot: int, fmt: WireFormat,
                  base_flat: Optional[jnp.ndarray] = None,
-                 param_size: Optional[int] = None):
+                 param_size: Optional[int] = None,
+                 batcher: Optional[IngestBatcher] = None):
         if fmt.delta_coded and base_flat is None:
             raise ValueError(f"wire scheme {fmt.scheme} is delta-coded and "
                              "needs the dispatch-version base to decode")
@@ -303,6 +369,7 @@ class IngestSession:
         self.base = base_flat
         self.param_size = int(param_size if param_size is not None
                               else buffer.param_size)
+        self.batcher = batcher
         self.covered = 0             # elements ingested so far (in order)
         self.nbytes = 0              # wire bytes seen
 
@@ -321,7 +388,10 @@ class IngestSession:
             vals = vals + jax.lax.slice(
                 self.base, (chunk.start,), (chunk.start + chunk.length,))
         if chunk.length:
-            self.buffer.write_range(self.slot, chunk.start, vals)
+            if self.batcher is not None:
+                self.batcher.enqueue(self.slot, chunk.start, vals)
+            else:
+                self.buffer.write_range(self.slot, chunk.start, vals)
         self.covered += chunk.length
         self.nbytes += chunk.nbytes
 

@@ -137,11 +137,13 @@ def test_delta_reconstruction_parity_all_algorithms(algorithm, scheme):
     """Acceptance: under lossy dispatch every algorithm keeps the clients'
     reconstructions within 1e-2 of the exact global they stand in for (the
     top-k dropped mass scales with round-over-round drift, so the fleet
-    drives realistic 1e-2-scale local updates)."""
+    drives realistic 1e-2-scale local updates).  Pinned on the per-client
+    fold-in path; the multicast engine trades a bounded amount of this
+    tracking error for shared encodes (tests/test_multicast.py)."""
     rng = np.random.default_rng(2)
     beta = 4.0 if algorithm in ("seafl", "seafl2") else None
     s = make_server(algorithm, beta=beta, dispatch_compression=scheme,
-                    dispatch_history=6)
+                    dispatch_history=6, dispatch_multicast=False)
     s.start()
     deltas_seen = 0
     for _ in range(18):
@@ -160,9 +162,12 @@ def test_delta_reconstruction_parity_all_algorithms(algorithm, scheme):
 
 def test_error_feedback_keeps_topk_dispatch_convergent():
     """Round after round of top-k deltas must not accumulate drift: the
-    server-side residual re-ships what the wire dropped."""
+    server-side residual re-ships what the wire dropped.  Pinned on the
+    per-client fold-in path (every delta re-ships); the multicast engine's
+    accumulate-then-resync bound is pinned in tests/test_multicast.py."""
     rng = np.random.default_rng(3)
-    s = make_server(dispatch_compression="topk:0.1", dispatch_history=8)
+    s = make_server(dispatch_compression="topk:0.1", dispatch_history=8,
+                    dispatch_multicast=False)
     s.start()
     errs = []
     for _ in range(24):
