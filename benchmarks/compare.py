@@ -77,6 +77,41 @@ def _load(path: str) -> dict:
         return json.load(f)
 
 
+def _gate_adaptive_ratio(data: dict, rows: list, failures: list) -> None:
+    """Gate the drift-adaptive dispatch policy against its own static run.
+
+    Unlike the throughput gates (current vs committed baseline), this is a
+    *within-report* invariant: the adaptive policy exists to ship fewer
+    downlink bytes, so the bench's drift run must come in strictly below
+    its static topk:0.1 twin on the same workload — a policy regression
+    fails CI even if every throughput number is fine.
+    """
+    sec = data.get("adaptive_ratio")
+    if not sec:
+        failures.append("dispatch/adaptive_ratio: section missing from the "
+                        "current report (did bench_dispatch change?)")
+        return
+    static = sec.get("static", {}).get("down_bytes")
+    drift = sec.get("drift", {}).get("down_bytes")
+    if static is None or drift is None:
+        failures.append("dispatch/adaptive_ratio: down_bytes missing")
+        return
+    ok = drift < static
+    if not ok:
+        failures.append(
+            f"dispatch/adaptive_ratio: drift policy shipped {drift} "
+            f"downlink bytes >= static topk:0.1's {static} — the adaptive "
+            f"ratio no longer saves wire bytes")
+    rows.append(("dispatch/adaptive_ratio/down_bytes(drift<static)",
+                 float(static), float(drift),
+                 (drift - static) / static if static else None,
+                 "ok" if ok else "REGRESSED"))
+    saving = sec.get("down_bytes_saving")
+    if saving is not None:
+        rows.append(("dispatch/adaptive_ratio/down_bytes_saving",
+                     None, float(saving), None, "info"))
+
+
 def compare(threshold: float = THRESHOLD) -> tuple[list[tuple], list[str]]:
     """-> (table rows: (metric, baseline, current, delta, status), failures)."""
     rows, failures = [], []
@@ -90,8 +125,11 @@ def compare(threshold: float = THRESHOLD) -> tuple[list[tuple], list[str]]:
         if not os.path.exists(base_path):
             failures.append(f"{fname}: no committed baseline at {base_path}")
             continue
-        cur_g, cur_i = _flatten(fname, _load(cur_path))
+        cur_data = _load(cur_path)
+        cur_g, cur_i = _flatten(fname, cur_data)
         base_g, base_i = _flatten(fname, _load(base_path))
+        if fname == "BENCH_dispatch.json":
+            _gate_adaptive_ratio(cur_data, rows, failures)
         for metric in sorted(set(base_g) | set(cur_g)):
             tag = f"{fname.removeprefix('BENCH_').removesuffix('.json')}" \
                   f"/{metric}"

@@ -460,6 +460,49 @@ def bench_dispatch():
             "resyncs": cache["resyncs"],
         }
 
+    # drift-adaptive dispatch ratio vs the static topk:0.1 baseline on the
+    # same fleet: the rate policy picks a discrete band ratio per round
+    # from the observed global drift, so quiet rounds ship far fewer
+    # coefficients.  benchmarks/compare.py *gates* this section: the
+    # adaptive run must ship strictly fewer downlink bytes than static.
+    adaptive: dict = {}
+    for policy in ("static", "drift"):
+        fl = FLConfig(algorithm="seafl", n_clients=10, concurrency=5,
+                      buffer_size=2, staleness_limit=6, local_epochs=2,
+                      local_lr=0.05, batch_size=16, seed=7,
+                      dispatch_compression="topk:0.1", dispatch_history=8,
+                      dispatch_ratio_policy=policy)
+        cfg = ExperimentConfig(
+            dataset="tiny", n_train=300, n_test=60, model="mlp", fl=fl,
+            sim=SimConfig(speed_model="pareto", seed=7,
+                          bandwidth_model="pareto", up_mbps=5.0,
+                          down_mbps=0.5),
+            seed=7)
+        sim, _ = run_experiment(cfg, max_rounds=12)
+        accs = [h.get("acc", 0.0) for h in sim.history]
+        counts: dict = {}
+        for rec in sim.ratio_log:
+            key = f"{rec['ratio']:g}"
+            counts[key] = counts.get(key, 0) + 1
+        adaptive[policy] = {
+            "down_bytes": int(sim.server.bytes_downloaded),
+            "best_acc": round(max(accs), 4) if accs else None,
+            "bytes_to_acc0.15_down": sim.bytes_to_accuracy(0.15, "down"),
+            "encode_cache_hit_rate": round(
+                sim.server.dispatch.cache_info()["hit_rate"], 3),
+            "dispatch_ratio_counts": counts,
+        }
+    saving = (adaptive["static"]["down_bytes"]
+              / max(adaptive["drift"]["down_bytes"], 1))
+    adaptive["down_bytes_saving"] = round(saving, 3)
+    report["adaptive_ratio"] = adaptive
+    rows.append(("dispatch/adaptive_ratio", f"{saving:.2f}",
+                 f"x_fewer_down_bytes_vs_static_topk0.1;"
+                 f"static={adaptive['static']['down_bytes']};"
+                 f"drift={adaptive['drift']['down_bytes']};"
+                 f"drift_best_acc={adaptive['drift']['best_acc']}"
+                 f"_vs_{adaptive['static']['best_acc']}_static"))
+
     with open(BENCH_DISPATCH_JSON, "w") as f:
         json.dump(report, f, indent=2)
     rows.append(("dispatch/report", "1", f"json={BENCH_DISPATCH_JSON}"))

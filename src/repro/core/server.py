@@ -41,6 +41,7 @@ import numpy as np
 from repro.core.aggregation import SeaflHyper
 from repro.core.buffer import Update, UpdateBuffer
 from repro.runtime.dispatch import DispatchPayload, DispatchSession
+from repro.runtime.policy import DriftTracker, RatePolicy, RESYNC_MODES
 from repro.runtime.transport import (
     Chunk, FlatErrorFeedback, IngestBatcher, IngestSession, UploadPayload,
     encode_update as transport_encode_update, make_wire_format,
@@ -91,6 +92,22 @@ class FLConfig:
     # fold-in on every delta — the pre-multicast semantics)
     dispatch_multicast: bool = True
     dispatch_resync: float = 4.0
+    # resync trigger economics (runtime/policy.py): 'norm' fires the
+    # fold-in at |r| > dispatch_resync x |hop delta| (the PR 4 behaviour,
+    # bit-for-bit); 'bytes' fires when the residual's projected top-k
+    # re-ship size exceeds dispatch_resync x one payload's wire bytes
+    dispatch_resync_mode: str = "norm"
+    # drift-adaptive top-k rate policy (runtime/policy.py): 'static' keeps
+    # the configured ratio; 'drift' bins the round-over-round global drift
+    # norm (normalised by its own EMA) into discrete bands and dispatches
+    # each round at that band's ratio.  Discrete bands keep the multicast
+    # encode-cache sharing intact within a band.  The same chosen ratio
+    # optionally drives uplink topk encoding (uplink_ratio_policy).
+    dispatch_ratio_policy: str = "static"    # 'static' | 'drift'
+    uplink_ratio_policy: str = "static"      # 'static' | 'drift'
+    drift_band_edges: tuple = (0.8, 1.6)     # on x = drift / ema(drift)
+    drift_band_ratios: tuple = (0.025, 0.05, 0.1)   # len(edges) + 1
+    drift_ema_beta: float = 0.8
     # streaming-ingest batch queue: coalesce up to this many pending chunk
     # writes across concurrent uploads into one donated scatter per flush
     # (0 = eager, one device dispatch per chunk — the pre-batching path)
@@ -128,6 +145,10 @@ class SeaflServer:
         self._flat = self.packer.pack(params)          # current global, (P,)
         self.round = 0
         self.wire = make_wire_format(cfg.compression, cfg.chunk_elems)
+        if cfg.dispatch_resync_mode not in RESYNC_MODES:
+            raise ValueError(f"dispatch_resync_mode must be one of "
+                             f"{RESYNC_MODES}, got "
+                             f"{cfg.dispatch_resync_mode!r}")
         self.dispatch: Optional[DispatchSession] = None
         if cfg.dispatch_compression is not None:
             self.dispatch = DispatchSession(
@@ -135,7 +156,23 @@ class SeaflServer:
                                  cfg.dispatch_chunk_elems),
                 cfg.dispatch_history,
                 multicast=cfg.dispatch_multicast,
-                resync=cfg.dispatch_resync)
+                resync=cfg.dispatch_resync,
+                resync_mode=cfg.dispatch_resync_mode)
+        # drift-adaptive rate policy: validated here so a bad band config
+        # fails at construction, not mid-run
+        self.rate_policy = RatePolicy.from_config(cfg)
+        if cfg.dispatch_ratio_policy == "drift" and (
+                self.dispatch is None
+                or self.dispatch.fmt.scheme != "topk"):
+            raise ValueError(
+                "dispatch_ratio_policy='drift' adapts the top-k dispatch "
+                "ratio and needs dispatch_compression='topk:<ratio>'")
+        if cfg.uplink_ratio_policy == "drift" and self.wire.scheme != "topk":
+            raise ValueError(
+                "uplink_ratio_policy='drift' adapts the top-k uplink "
+                "ratio and needs compression='topk:<ratio>'")
+        self._drift = DriftTracker(cfg.drift_ema_beta)
+        self._ratio_by_version: dict[int, float] = {}
         self._buffer_dtype = BUFFER_DTYPES[cfg.buffer_dtype]
         self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size,
                                    dtype=self._buffer_dtype)
@@ -195,6 +232,10 @@ class SeaflServer:
         self._history = {v: p for v, p in self._history.items() if v in live}
         self._unpack_cache = {v: p for v, p in self._unpack_cache.items()
                               if v in live}
+        # chosen per-version ratios die with the versions they encode for
+        self._ratio_by_version = {v: r for v, r in
+                                  self._ratio_by_version.items()
+                                  if v in self._history}
         if self.dispatch is not None:
             # encode-cache entries age out with the ring they index into
             self.dispatch.age_cache(self.round)
@@ -282,8 +323,26 @@ class SeaflServer:
                 scheme="raw", param_size=self.packer.size, chunks=None,
                 nbytes=4 * self.packer.size,
                 encode_cost_bytes=4 * self.packer.size)
+        ratio = None
+        if self.cfg.dispatch_ratio_policy == "drift":
+            ratio = self._ratio_by_version.get(target)
         return self.dispatch.encode(cid, target, self._history,
-                                    materialize=materialize)
+                                    materialize=materialize, ratio=ratio)
+
+    def dispatch_ratio(self, version: Optional[int] = None) -> Optional[float]:
+        """Effective top-k dispatch ratio for dispatches of ``version``
+        (default: the current round): the drift band's chosen ratio when
+        the adaptive policy is on, the static configured ratio for topk
+        dispatch, None for non-topk schemes — what the simulator records
+        in its per-round history."""
+        if self.dispatch is None or self.dispatch.fmt.scheme != "topk":
+            return None
+        v = self.round if version is None else version
+        if self.cfg.dispatch_ratio_policy == "drift":
+            r = self._ratio_by_version.get(v)
+            if r is not None:
+                return r
+        return self.dispatch.fmt.topk_ratio
 
     def deliver_dispatch(self, cid: int, payload: DispatchPayload) -> None:
         """The last downlink chunk reached the client: account the wire
@@ -314,20 +373,45 @@ class SeaflServer:
         version = self.active[cid]
         flat = self.packer.pack(client_params)
         wire = self.wire
-        if wire.scheme == "topk" and n_epochs < self.cfg.local_epochs:
-            # SEAFL² byte coupling: a notified partial-training client did
-            # n' < E epochs of work, so its update carries proportionally
-            # less signal — ship proportionally fewer bytes.  (Decode is
-            # ratio-free: topk chunks carry their own indices.)
-            wire = dc_replace(
-                wire, topk_ratio=wire.topk_ratio
-                * max(1, n_epochs) / self.cfg.local_epochs)
+        if wire.scheme == "topk":
+            if self.cfg.uplink_ratio_policy == "drift":
+                # the drift band chosen for the version this client trained
+                # from also sizes its upload (same discrete-ratio set)
+                r = self._ratio_by_version.get(version)
+                if r is not None:
+                    wire = dc_replace(wire, topk_ratio=r)
+            if n_epochs < self.cfg.local_epochs:
+                # SEAFL² byte coupling: a notified partial-training client
+                # did n' < E epochs of work, so its update carries
+                # proportionally less signal — ship proportionally fewer
+                # bytes.  (Decode is ratio-free: topk chunks carry their
+                # own indices.)
+                wire = dc_replace(
+                    wire, topk_ratio=wire.topk_ratio
+                    * max(1, n_epochs) / self.cfg.local_epochs)
         base = ef = None
         if wire.delta_coded:
-            base = self._history[version]
+            base = self._uplink_base(cid, version)
             ef = self._ef.setdefault(cid, FlatErrorFeedback())
         return transport_encode_update(cid, version, n_epochs, flat,
                                        wire, base, ef)
+
+    def _uplink_base(self, cid: int, version: int) -> jnp.ndarray:
+        """The flat base a delta-coded upload is measured against.
+
+        Under a lossy dispatch scheme the client never saw the exact
+        ``ring[version]`` snapshot — it trained from the *delivered*
+        reconstruction (``held = ring[version] - dispatch residual``), so
+        its uplink delta must be measured against that reconstruction, and
+        the server (which knows the residual exactly) decodes against the
+        same base.  Using ``ring[version]`` on either end would silently
+        fold the dispatch reconstruction mismatch into every upload — the
+        cross-direction error-coupling bug.  Exact-dispatch modes
+        (legacy/f32, or no tracking for this client) keep the snapshot."""
+        if (self.dispatch is not None
+                and self.dispatch.versions.get(cid) == version):
+            return self.dispatch.held_flat(cid, self._history)
+        return self._history[version]
 
     def begin_ingest(self, cid: int, version: int, n_epochs: int,
                      recv_time: float = 0.0) -> IngestSession:
@@ -335,7 +419,8 @@ class SeaflServer:
         upload and return the session that decodes chunks into it."""
         if cid in self._ingests:
             raise RuntimeError(f"client {cid} already has an ingest open")
-        base = self._history[version] if self.wire.delta_coded else None
+        base = (self._uplink_base(cid, version) if self.wire.delta_coded
+                else None)
         slot = self.buffer.reserve(Update(
             client_id=cid, n_samples=self.client_sizes[cid], version=version,
             n_epochs=n_epochs, recv_time=recv_time))
@@ -414,6 +499,7 @@ class SeaflServer:
             fedbuff_aggregate_flat, fedasync_aggregate_flat,
         )
         cfg = self.cfg
+        prev_flat = self._flat            # drift observation base
         updates = self.buffer.updates()
         staleness = np.asarray([self.round - u.version for u in updates],
                                np.float32)
@@ -463,6 +549,15 @@ class SeaflServer:
         self.round += 1
         self.total_aggregations += 1
         self._history[self.round] = self._flat
+        if self.rate_policy.active:
+            # one scalar per aggregation: the round-over-round drift norm,
+            # EMA-normalised and binned into a discrete ratio band.  Chosen
+            # once per target version, so every dispatch of this round
+            # (and its multicast cache hops) shares the band's ratio.
+            x = self._drift.observe(
+                float(jnp.linalg.norm(self._flat - prev_flat)))
+            self._ratio_by_version[self.round] = \
+                self.rate_policy.ratio_for(x)
         self._gc_history()
 
         # contributors + top-up to M go back to training on the new model
@@ -497,6 +592,12 @@ class SeaflServer:
             "bytes_downloaded": int(self.bytes_downloaded),
             "dispatch": (self.dispatch.state_dict()
                          if self.dispatch is not None else None),
+            # drift-band rate policy: the EMA float + per-live-version
+            # chosen ratios — without them a restored session would
+            # re-encode in-ring hops at the wrong ratio (different bytes)
+            "drift": self._drift.state_dict(),
+            "ratio_by_version": {str(v): float(r) for v, r in
+                                 self._ratio_by_version.items()},
             "rng": self._rng.bit_generator.state,
             "history_versions": sorted(self._history),
             "buffer": [
@@ -550,6 +651,11 @@ class SeaflServer:
                     f"state (clients re-request full snapshots)")
                 disp_state, disp_trees = None, {}
             self.dispatch.load_state(disp_state or {}, disp_trees)
+        self._drift = DriftTracker.from_state(state.get("drift"),
+                                              self.cfg.drift_ema_beta)
+        self._ratio_by_version = {
+            int(k): float(v)
+            for k, v in state.get("ratio_by_version", {}).items()}
         self._rng = np.random.default_rng()
         self._rng.bit_generator.state = state["rng"]
         self._history = {int(k[1:]): jnp.asarray(v)

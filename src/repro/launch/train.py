@@ -41,7 +41,11 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                 lr: float = 0.02, seed: int = 0, compression=None,
                 dispatch_compression=None, dispatch_history: int = 8,
                 dispatch_multicast: bool = True, dispatch_resync: float = 4.0,
-                ingest_batch: int = 16):
+                dispatch_resync_mode: str = "norm", ingest_batch: int = 16,
+                dispatch_ratio_policy: str = "static",
+                uplink_ratio_policy: str = "static",
+                drift_band_edges=(0.8, 1.6),
+                drift_band_ratios=(0.025, 0.05, 0.1)):
     cfg = smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg)
     params0 = model.init(jax.random.PRNGKey(seed))
@@ -84,6 +88,11 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                   dispatch_history=dispatch_history,
                   dispatch_multicast=dispatch_multicast,
                   dispatch_resync=dispatch_resync,
+                  dispatch_resync_mode=dispatch_resync_mode,
+                  dispatch_ratio_policy=dispatch_ratio_policy,
+                  uplink_ratio_policy=uplink_ratio_policy,
+                  drift_band_edges=tuple(drift_band_edges),
+                  drift_band_ratios=tuple(drift_band_ratios),
                   ingest_batch_chunks=ingest_batch)
     server = SeaflServer(fl, params0, {c.cid: c.n_samples
                                        for c in clients.values()})
@@ -127,6 +136,24 @@ def main():
     ap.add_argument("--dispatch-resync", type=float, default=4.0,
                     help="residual/|hop delta| ratio that forces a "
                          "personalized fold-in re-encode under multicast")
+    ap.add_argument("--dispatch-resync-mode", default="norm",
+                    choices=["norm", "bytes"],
+                    help="resync trigger: norm threshold (PR-4 exact) or "
+                         "the byte-budget projection (runtime/policy.py)")
+    ap.add_argument("--dispatch-ratio-policy", default="static",
+                    choices=["static", "drift"],
+                    help="topk dispatch ratio: static, or drift-banded by "
+                         "the round-over-round global drift norm")
+    ap.add_argument("--uplink-ratio-policy", default="static",
+                    choices=["static", "drift"],
+                    help="apply the drift band's chosen ratio to topk "
+                         "uplink encoding too")
+    ap.add_argument("--drift-band-edges", default="0.8,1.6",
+                    help="comma-separated ascending edges on "
+                         "drift/EMA(drift)")
+    ap.add_argument("--drift-band-ratios", default="0.025,0.05,0.1",
+                    help="comma-separated per-band topk ratios "
+                         "(len = edges + 1)")
     ap.add_argument("--ingest-batch", type=int, default=16,
                     help="streaming-ingest chunk writes coalesced per "
                          "donated scatter (0 = eager per-chunk writes)")
@@ -145,6 +172,13 @@ def main():
         dispatch_history=args.dispatch_history,
         dispatch_multicast=args.dispatch_multicast,
         dispatch_resync=args.dispatch_resync,
+        dispatch_resync_mode=args.dispatch_resync_mode,
+        dispatch_ratio_policy=args.dispatch_ratio_policy,
+        uplink_ratio_policy=args.uplink_ratio_policy,
+        drift_band_edges=tuple(
+            float(x) for x in args.drift_band_edges.split(",") if x),
+        drift_band_ratios=tuple(
+            float(x) for x in args.drift_band_ratios.split(",") if x),
         ingest_batch=args.ingest_batch)
 
     ck = None
@@ -184,6 +218,12 @@ def main():
         f", dispatch_delta={disp.delta_dispatches}"
         f", encode_cache_hit_rate={disp.cache_info()['hit_rate']:.2f}"
         f", resyncs={disp.resync_dispatches}")
+    if sim.ratio_log:
+        counts: dict = {}
+        for r in sim.ratio_log:
+            counts[r["ratio"]] = counts.get(r["ratio"], 0) + 1
+        bands = ", ".join(f"{k}: {v}" for k, v in sorted(counts.items()))
+        disp_note += f", dispatch_ratio_bands={{{bands}}}"
     print(f"[train] done: {server.round} rounds, "
           f"{server.total_aggregations} aggregations, "
           f"uplink_bytes={server.bytes_uploaded}, "

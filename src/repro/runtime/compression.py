@@ -118,12 +118,22 @@ class ErrorFeedback:
 
 
 def make_compressor(spec: Optional[str]) -> Optional[Compressor]:
-    """spec: None | 'topk:<ratio>' | 'int8'."""
+    """spec: None | 'topk:<ratio>' | 'int8'.
+
+    Spec parsing/validation is the shared wire grammar
+    (:func:`repro.runtime.codecs.parse_spec`) — the same strings and the
+    same error messages as ``FLConfig.compression`` /
+    ``FLConfig.dispatch_compression``; this per-leaf substrate just has no
+    raw (f32/bf16) modes, because an uncompressed pytree needs no
+    compressor at all.
+    """
+    from repro.runtime.codecs import parse_spec
     if spec is None or spec == "none":
         return None
-    if spec.startswith("topk"):
-        ratio = float(spec.split(":")[1]) if ":" in spec else 0.1
+    scheme, ratio = parse_spec(spec)
+    if scheme == "topk":
         return TopKCompressor(ratio=ratio)
-    if spec == "int8":
+    if scheme == "int8":
         return Int8Compressor()
-    raise ValueError(f"unknown compressor {spec}")
+    raise ValueError(f"wire scheme {scheme!r} has no per-leaf compressor "
+                     f"(raw schemes are wire-level only)")

@@ -2,9 +2,14 @@
 
 The uplink transport (runtime/transport.py) made client->server payloads a
 first-class wire object; this module is its mirror for the server->client
-direction.  A :class:`DispatchSession` tracks, per client, the last global
-version the client fully received, and serves each dispatch as chunked
-payloads over the same wire format:
+direction.  Chunk encode/decode is the shared codec layer
+(:mod:`repro.runtime.codecs` — the same registry the uplink consumes); what
+lives here is the downlink protocol: per-client version tracking, the
+bounded global-history ring, server-side error feedback, and the multicast
+encode cache.
+
+A :class:`DispatchSession` tracks, per client, the last global version the
+client fully received, and serves each dispatch as chunked payloads:
 
   f32   — raw f32 chunks of the current global.  Bit-identical to the
           legacy broadcast path (the client ends up holding exactly the
@@ -24,6 +29,12 @@ client, or one whose version aged out of the ring receives a **full
 snapshot** as raw f32 chunks (exact, and it resets the error-feedback
 residual).
 
+Adaptive ratio: ``encode(..., ratio=...)`` overrides the static top-k
+ratio for this dispatch — the drift-band rate policy
+(:mod:`repro.runtime.policy`) chooses one ratio per *target* version, so
+every client on the same hop still shares one cached encode and the
+payload records the ratio it actually shipped at.
+
 Multicast encode cache
 ----------------------
 
@@ -37,20 +48,22 @@ chunk_elems)``; every other client on the same hop fans out the cached
 chunks byte-identically.  Cache entries die with the ring (aging evicts any
 entry whose base or target left the retained window) and are never
 checkpointed: a restored session starts cold and simply re-encodes —
-byte-identically, since the ring and residuals are restored.
+byte-identically, since the ring, residuals and chosen ratios are restored.
 
 Error feedback under shared payloads: the per-client residual keeps its
 invariant — the client holds ``ring[version] - residual`` — but instead of
 folding the residual into the wire (which would make every payload
 client-specific), delivery *accumulates* the shared encode error:
 ``r' = r + (hop_delta - decoded)``.  Accumulation is a random walk, so a
-client whose residual outgrows the hop (``|r| > dispatch_resync * |delta|``)
-is **resynced** with a personalized fold-in encode — the classic EF payload
-``delta + r``, same wire bytes, cache-bypassed — which re-ships the
-accumulated error and pulls the residual back to the EF equilibrium band.
-``multicast=False`` restores the pre-multicast per-client fold-in semantics
-on every delta.  Both modes maintain the same ``held_flat`` algebra, so
-checkpoints are interchangeable across them.
+client whose residual outgrows the hop is **resynced** with a personalized
+fold-in encode — the classic EF payload ``delta + r``, same wire bytes,
+cache-bypassed — which re-ships the accumulated error and pulls the
+residual back to the EF equilibrium band.  The trigger is
+``policy.needs_resync``: norm-threshold by default
+(``|r| > resync * |delta|``), or the byte-budget projection
+(``resync_mode='bytes'``).  ``multicast=False`` restores the pre-multicast
+per-client fold-in semantics on every delta.  Both modes maintain the same
+``held_flat`` algebra, so checkpoints are interchangeable across them.
 
 The residual commits only at *delivery* (``deliver``): a payload that dies
 on the wire (client crash inside the dispatch window) leaves no trace, the
@@ -66,12 +79,13 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.runtime.transport import (
-    CHUNK_HEADER_BYTES, Chunk, WireFormat, decode_concat, encode_flat,
+from repro.runtime.codecs import (
+    CHUNK_HEADER_BYTES, Chunk, WireFormat, decode_concat, encode_error,
+    encode_flat,
 )
+from repro.runtime.policy import needs_resync
 
 __all__ = [
     "DispatchPayload",
@@ -101,6 +115,11 @@ class DispatchPayload:
     pure ring hop, *added to* the client's residual at delivery — the same
     array object fans out with the cached chunks to every co-held client.
 
+    ``ratio`` is the top-k ratio this payload actually shipped at (None for
+    non-topk schemes and full snapshots) — the rate policy's chosen ratio
+    when drift-adaptive dispatch is on, the static configured ratio
+    otherwise; the simulator records it per dispatch.
+
     ``encode_cost_bytes`` is the f32 source bytes this encode actually
     processed server-side: 4*P for any fresh encode (full, personalized, or
     a cache miss), 0 for a cache hit.  The simulator's encode-time model
@@ -116,6 +135,7 @@ class DispatchPayload:
     residual: Optional[jnp.ndarray] = None
     shared: bool = False
     resync: bool = False
+    ratio: Optional[float] = None
     encode_cost_bytes: int = 0
 
     @property
@@ -140,6 +160,8 @@ def apply_dispatch(payload: DispatchPayload, fmt: WireFormat,
         return decode_concat(payload.chunks, full_fmt)
     if held_flat is None:
         raise ValueError("delta dispatch payload needs the held base model")
+    if payload.ratio is not None and fmt.scheme == "topk":
+        fmt = replace(fmt, topk_ratio=payload.ratio)
     return held_flat + decode_concat(payload.chunks, fmt)
 
 
@@ -157,16 +179,18 @@ class DispatchSession:
     encode cache (see module docstring); ``use_cache=False`` keeps the
     multicast semantics but re-encodes every payload — a testing/benchmark
     knob proving the cache is a pure amortisation (bit-identical payloads,
-    residuals equal to the per-client-encode path).
+    residuals equal to the per-client-encode path).  ``resync_mode``
+    selects the fold-in trigger ('norm' | 'bytes', runtime/policy.py).
     """
 
     def __init__(self, fmt: WireFormat, history: int,
                  multicast: bool = True, resync: float = 4.0,
-                 use_cache: bool = True):
+                 use_cache: bool = True, resync_mode: str = "norm"):
         self.fmt = fmt
         self.history = max(1, int(history))
         self.multicast = bool(multicast)
         self.resync = float(resync)
+        self.resync_mode = str(resync_mode)
         self.use_cache = bool(use_cache)
         self.versions: dict[int, int] = {}       # cid -> held global version
         self.residuals: dict[int, jnp.ndarray] = {}   # delta schemes only
@@ -174,8 +198,9 @@ class DispatchSession:
         self.delta_dispatches = 0
         self.resync_dispatches = 0
         # (base, target, scheme, ratio, chunk_elems) ->
-        #     (chunks, shared_err, nbytes); bounded by ring aging (both
-        # versions must stay in the retained window), never checkpointed
+        #     (chunks, shared_err, nbytes, hop_norm); bounded by ring aging
+        # (both versions must stay in the retained window), never
+        # checkpointed
         self._cache: dict[tuple, tuple] = {}
         self.cache_hits = 0
         self.cache_misses = 0
@@ -200,19 +225,32 @@ class DispatchSession:
         """Drop every cached encode (checkpoint restore starts cold)."""
         self._cache = {}
 
-    def _cache_key(self, base: Optional[int], target: int) -> tuple:
-        f = self.fmt
+    def _cache_key(self, base: Optional[int], target: int,
+                   fmt: Optional[WireFormat] = None) -> tuple:
+        f = fmt if fmt is not None else self.fmt
         return (base, target, f.scheme, f.topk_ratio, f.chunk_elems)
+
+    def _fmt_for(self, ratio: Optional[float]) -> WireFormat:
+        """The wire format this dispatch actually encodes at: the static
+        session format, with the rate policy's chosen top-k ratio swapped
+        in.  Only top-k is ratio-shaped; other schemes ignore the ratio."""
+        if ratio is None or self.fmt.scheme != "topk" \
+                or float(ratio) == self.fmt.topk_ratio:
+            return self.fmt
+        return replace(self.fmt, topk_ratio=float(ratio))
 
     def encode(self, cid: int, target: int,
                ring: dict[int, jnp.ndarray],
-               materialize: bool = True) -> DispatchPayload:
+               materialize: bool = True,
+               ratio: Optional[float] = None) -> DispatchPayload:
         """Encode one dispatch of global version ``target`` to ``cid``.
 
         ``ring`` maps version -> flat (P,) global (the server's
-        ``_history``).  Does not mutate tracking state (the encode cache and
-        its hit/miss counters are amortisation bookkeeping, not protocol
-        state).
+        ``_history``).  ``ratio`` (drift-band rate policy) overrides the
+        static top-k ratio for this dispatch; the cache key carries it, so
+        hop sharing survives within a band.  Does not mutate tracking state
+        (the encode cache and its hit/miss counters are amortisation
+        bookkeeping, not protocol state).
 
         ``materialize=False`` skips building the actual wire chunks for
         *raw/full* payloads (their byte size has a closed form and their
@@ -227,7 +265,8 @@ class DispatchSession:
         the encoded wire actually delivers.
         """
         g = ring[target]
-        fmt = self.fmt
+        fmt = self._fmt_for(ratio)
+        wire_ratio = fmt.topk_ratio if fmt.scheme == "topk" else None
         held = self.versions.get(cid)
         usable = (held is not None and held in ring
                   and held in self.ring_versions(target))
@@ -236,7 +275,7 @@ class DispatchSession:
             p = int(g.shape[0])
             delta = None
             if self.multicast:
-                key = self._cache_key(held, target)
+                key = self._cache_key(held, target, fmt)
                 self.age_cache(target)
                 ent = self._cache.get(key) if self.use_cache else None
                 # resync decision: a pure cache hit never materialises the
@@ -244,18 +283,20 @@ class DispatchSession:
                 # hot path pays one norm sync for the residual, not two
                 # reductions plus a (P,) subtraction per client
                 if r is None:
-                    needs_resync = False
+                    resync_now = False
                 elif self.resync <= 0.0:
-                    needs_resync = True
+                    resync_now = True
                 else:
                     if ent is not None:
                         dnorm = ent[3]
                     else:
                         delta = g - ring[held]
                         dnorm = float(jnp.linalg.norm(delta))
-                    needs_resync = float(jnp.linalg.norm(r)) > \
-                        self.resync * dnorm + 1e-12
-                if not needs_resync:
+                    resync_now = needs_resync(
+                        self.resync_mode,
+                        r_norm=float(jnp.linalg.norm(r)), hop_norm=dnorm,
+                        threshold=self.resync, fmt=fmt, param_size=p)
+                if not resync_now:
                     if ent is not None:
                         self.cache_hits += 1
                         chunks, err, nbytes, _ = ent
@@ -264,8 +305,7 @@ class DispatchSession:
                         if delta is None:
                             delta = g - ring[held]
                         chunks = encode_flat(delta, fmt)
-                        err = delta - decode_concat(chunks, fmt) \
-                            if p else None
+                        err = encode_error(delta, chunks, fmt)
                         nbytes = sum(c.nbytes for c in chunks)
                         if self.use_cache:
                             self._cache[key] = (
@@ -277,7 +317,7 @@ class DispatchSession:
                         cid=cid, target_version=target, base_version=held,
                         scheme=fmt.scheme, param_size=p, chunks=chunks,
                         nbytes=nbytes, residual=err, shared=True,
-                        encode_cost_bytes=cost)
+                        ratio=wire_ratio, encode_cost_bytes=cost)
             # personalized fold-in encode: multicast off, or this client's
             # accumulated residual tripped the resync threshold — same wire
             # bytes as the shared hop, but the payload re-ships the residual
@@ -285,14 +325,13 @@ class DispatchSession:
                 delta = g - ring[held]
             vec = delta if r is None else delta + r
             chunks = encode_flat(vec, fmt)
-            residual = vec - decode_concat(chunks, fmt) \
-                if int(vec.shape[0]) else None
             return DispatchPayload(
                 cid=cid, target_version=target, base_version=held,
                 scheme=fmt.scheme, param_size=p, chunks=chunks,
-                nbytes=sum(c.nbytes for c in chunks), residual=residual,
+                nbytes=sum(c.nbytes for c in chunks),
+                residual=encode_error(vec, chunks, fmt),
                 shared=False, resync=(self.multicast and r is not None),
-                encode_cost_bytes=4 * p)
+                ratio=wire_ratio, encode_cost_bytes=4 * p)
         # full snapshot: raw schemes ship themselves; delta schemes fall
         # back to exact raw f32 (a lossy top-k of the *whole model* would be
         # meaningless for a client with no base)
@@ -301,7 +340,7 @@ class DispatchSession:
         closed_form = (full_fmt.payload_bytes(p) if p
                        else CHUNK_HEADER_BYTES)
         if self.multicast:
-            key = self._cache_key(None, target)
+            key = self._cache_key(None, target, full_fmt)
             self.age_cache(target)
             ent = self._cache.get(key) if self.use_cache else None
             # a sentinel (chunk-less) entry satisfies lazy requests; a

@@ -117,6 +117,10 @@ class FLSimulation:
         self.now = 0.0
         self.encode_seconds = 0.0      # cumulative server encode time spent
         self.history: list[dict] = []
+        # one record per topk dispatch actually encoded: the ratio it
+        # shipped at (the drift band's choice under the adaptive policy,
+        # the static configured ratio otherwise)
+        self.ratio_log: list[dict] = []
         # per-client static speed multiplier (Pareto heavy tail, paper §VI)
         self._speed = {
             cid: float(self._rng.pareto(sim_cfg.pareto_shape) + 1.0)
@@ -193,6 +197,10 @@ class FLSimulation:
         # raw/full payload chunks are never read here (the training base is
         # reconstructed server-side), so skip materialising them
         payload = self.server.encode_dispatch(cid, materialize=False)
+        if payload.ratio is not None:
+            self.ratio_log.append({
+                "time": self.now, "cid": cid,
+                "round": payload.target_version, "ratio": payload.ratio})
         enc = self._encode_time(payload)
         self.encode_seconds += enc
         t0 = self.now + enc + self._down_time(cid, payload.nbytes)
@@ -301,6 +309,7 @@ class FLSimulation:
                "bytes": int(self.server.bytes_uploaded),
                "bytes_down": int(self.server.bytes_downloaded),
                "encode_s": self.encode_seconds,
+               "dispatch_ratio": self.server.dispatch_ratio(),
                "loss": last_loss}
         if self.eval_fn is not None and (agg.round % self.eval_every == 0):
             rec["acc"] = float(self.eval_fn(self.server.params))

@@ -11,41 +11,41 @@ writes through a shared :class:`IngestBatcher` (one donated scatter per
 flush instead of one device dispatch per chunk) — committed slots stay
 bit-identical to the eager path.
 
-Wire schemes (``WireFormat.scheme``):
+Chunk encode/decode itself lives in the shared codec layer
+(:mod:`repro.runtime.codecs`) — one registry serving both this uplink and
+the downlink dispatch (:mod:`repro.runtime.dispatch`).  Scheme summary
+(``WireFormat.scheme``): ``f32`` (bit-exact raw), ``bf16`` (half-size raw),
+``topk``/``int8`` (lossy *deltas* vs the dispatch base, carried with flat
+error feedback).  Delta-coded schemes need the base on both ends; raw
+schemes are base-free, so a freshly restored server can ingest them without
+any version history.
 
-  f32   — raw f32 param chunks (4 B/elem).  Bit-identical to the monolithic
-          ``ParamPacker.pack`` path; the no-compression baseline.
-  bf16  — bf16 param chunks (2 B/elem).  Halves uplink bytes at ~3 decimal
-          digits; pairs naturally with the bf16 buffer mode.
-  topk  — per-chunk top-k sparsification of the *delta* vs the dispatch
-          base (idx i32 + val f32 = 8 B per kept elem), with flat
-          error feedback preserving convergence.
-  int8  — per-chunk symmetric int8 quantisation of the delta (1 B/elem +
-          4 B scale), with flat error feedback.
-
-Delta-coded schemes (topk/int8) need the dispatch-version base on both ends;
-raw schemes (f32/bf16) are base-free, so a freshly restored server can ingest
-them without any version history.
-
-Every chunk carries ``CHUNK_HEADER_BYTES`` of framing (seq, offset, length,
-scheme tag) counted into its wire size, so the simulator's bandwidth model
-charges real bytes, not idealised payload bytes.
+This module keeps what is genuinely uplink-shaped: the payload object, the
+client-side encoder with its EF fold, and the server-side streaming ingest
+(sessions + the batched scatter queue).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+from repro.runtime.codecs import (
+    CHUNK_HEADER_BYTES, DEFAULT_CHUNK_ELEMS, Chunk, FlatErrorFeedback,
+    WireFormat, decode_chunk, decode_concat, encode_chunk, encode_flat,
+    make_wire_format, parse_spec,
+)
 
 __all__ = [
     "CHUNK_HEADER_BYTES",
+    "DEFAULT_CHUNK_ELEMS",
     "Chunk",
     "WireFormat",
+    "parse_spec",
     "make_wire_format",
+    "encode_chunk",
     "encode_flat",
     "decode_chunk",
     "decode_concat",
@@ -56,193 +56,8 @@ __all__ = [
     "IngestSession",
 ]
 
-# seq:u32 | start:u64 | length:u32  — fixed framing per chunk
-CHUNK_HEADER_BYTES = 16
-
-DEFAULT_CHUNK_ELEMS = 1 << 16
-
-
-@dataclass(frozen=True)
-class WireFormat:
-    """Static description of one uplink encoding."""
-    scheme: str = "f32"                      # f32 | bf16 | topk | int8
-    chunk_elems: int = DEFAULT_CHUNK_ELEMS   # elements per wire chunk
-    topk_ratio: float = 0.1
-
-    @property
-    def delta_coded(self) -> bool:
-        """True when the wire carries delta-vs-base (needs base + EF)."""
-        return self.scheme in ("topk", "int8")
-
-    def chunk_wire_bytes(self, n: int) -> int:
-        """Wire bytes for one n-element chunk (header included)."""
-        if self.scheme == "f32":
-            body = 4 * n
-        elif self.scheme == "bf16":
-            body = 2 * n
-        elif self.scheme == "topk":
-            body = 8 * max(1, int(n * self.topk_ratio))
-        elif self.scheme == "int8":
-            body = n + 4
-        else:                                  # pragma: no cover
-            raise ValueError(f"unknown wire scheme {self.scheme}")
-        return body + CHUNK_HEADER_BYTES
-
-    def payload_bytes(self, p: int) -> int:
-        """Total wire bytes for a (p,)-element update under this format."""
-        total, off = 0, 0
-        while off < p:
-            n = min(self.chunk_elems, p - off)
-            total += self.chunk_wire_bytes(n)
-            off += n
-        return total
-
-
-def make_wire_format(spec: Optional[str],
-                     chunk_elems: int = DEFAULT_CHUNK_ELEMS) -> WireFormat:
-    """spec: None | 'f32' | 'bf16' | 'topk:<ratio>' | 'int8'.
-
-    ``None`` means uncompressed — raw f32 chunks (the payload still has a
-    real wire size, which is the whole point of the bandwidth model).
-    """
-    if spec is None or spec in ("none", "f32"):
-        return WireFormat("f32", chunk_elems)
-    if spec == "bf16":
-        return WireFormat("bf16", chunk_elems)
-    if spec.startswith("topk"):
-        ratio = float(spec.split(":")[1]) if ":" in spec else 0.1
-        if not 0.0 < ratio <= 1.0:
-            raise ValueError(f"topk ratio must be in (0, 1], got {ratio}")
-        return WireFormat("topk", chunk_elems, topk_ratio=ratio)
-    if spec == "int8":
-        return WireFormat("int8", chunk_elems)
-    raise ValueError(f"unknown wire format spec {spec!r}")
-
-
-@dataclass
-class Chunk:
-    """One wire chunk: a contiguous [start, start+length) window of the
-    flat (P,) vector, encoded per the session's WireFormat."""
-    seq: int
-    start: int
-    length: int
-    payload: Any                 # scheme-specific device array(s)
-    nbytes: int                  # wire size incl. CHUNK_HEADER_BYTES
-
-
-# --------------------------------------------------------------- encoders
-# jit'd per (scheme, chunk length); at most two lengths occur per P (full
-# chunks + one tail), so compile count stays tiny.
-
-@jax.jit
-def _enc_bf16(x):
-    return x.astype(jnp.bfloat16)
-
-
-@partial(jax.jit, static_argnames=("k",))
-def _enc_topk(x, k):
-    xf = x.astype(jnp.float32)
-    _, idx = jax.lax.top_k(jnp.abs(xf), k)
-    return {"idx": idx.astype(jnp.int32), "val": xf[idx]}
-
-
-@jax.jit
-def _enc_int8(x):
-    xf = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
-    return {"q": q, "scale": scale}
-
-
-@partial(jax.jit, static_argnames=("n",))
-def _dec_topk(idx, val, n):
-    return jnp.zeros((n,), jnp.float32).at[idx].set(val)
-
-
-@jax.jit
-def _dec_int8(q, scale):
-    return q.astype(jnp.float32) * scale
-
-
-def encode_chunk(x: jnp.ndarray, seq: int, start: int,
-                 fmt: WireFormat) -> Chunk:
-    """Encode one (n,) f32 window of the flat vector."""
-    n = int(x.shape[0])
-    if fmt.scheme == "f32":
-        payload = x                                   # bit-exact passthrough
-    elif fmt.scheme == "bf16":
-        payload = _enc_bf16(x)
-    elif fmt.scheme == "topk":
-        payload = _enc_topk(x, max(1, int(n * fmt.topk_ratio)))
-    elif fmt.scheme == "int8":
-        payload = _enc_int8(x)
-    else:                                             # pragma: no cover
-        raise ValueError(f"unknown wire scheme {fmt.scheme}")
-    return Chunk(seq=seq, start=start, length=n, payload=payload,
-                 nbytes=fmt.chunk_wire_bytes(n))
-
-
-def decode_chunk(chunk: Chunk, fmt: WireFormat) -> jnp.ndarray:
-    """Decode one chunk back to its (length,) f32 window."""
-    if fmt.scheme == "f32":
-        return chunk.payload
-    if fmt.scheme == "bf16":
-        return chunk.payload.astype(jnp.float32)
-    if fmt.scheme == "topk":
-        return _dec_topk(chunk.payload["idx"], chunk.payload["val"],
-                         chunk.length)
-    if fmt.scheme == "int8":
-        return _dec_int8(chunk.payload["q"], chunk.payload["scale"])
-    raise ValueError(f"unknown wire scheme {fmt.scheme}")     # pragma: no cover
-
-
-def decode_concat(chunks: list[Chunk], fmt: WireFormat) -> jnp.ndarray:
-    """Decode an in-order chunk sequence back to one flat f32 vector."""
-    vals = [decode_chunk(c, fmt) for c in chunks if c.length]
-    if not vals:
-        return jnp.zeros((0,), jnp.float32)
-    return jnp.concatenate(vals) if len(vals) > 1 else vals[0]
-
-
-def encode_flat(vec: jnp.ndarray, fmt: WireFormat) -> list[Chunk]:
-    """Split a flat (P,) vector into encoded wire chunks."""
-    p = int(vec.shape[0])
-    chunks, off, seq = [], 0, 0
-    while off < p:
-        n = min(fmt.chunk_elems, p - off)
-        chunks.append(encode_chunk(jax.lax.slice(vec, (off,), (off + n,)),
-                                   seq, off, fmt))
-        off += n
-        seq += 1
-    if not chunks:             # zero-parameter model: one empty sentinel
-        chunks.append(Chunk(0, 0, 0, jnp.zeros((0,), jnp.float32),
-                            CHUNK_HEADER_BYTES))
-    return chunks
-
 
 # --------------------------------------------------------------- client side
-
-class FlatErrorFeedback:
-    """Per-client error feedback on the flat (P,) delta.
-
-    The residual the lossy wire dropped last round is added to this round's
-    delta before encoding, preserving convergence of compressed uploads
-    (same contract as the per-leaf pytree ErrorFeedback it replaces — but
-    one (P,) array instead of a delta-shaped pytree).
-    """
-
-    def __init__(self, residual: Optional[jnp.ndarray] = None):
-        self.residual = residual
-
-    def carry_in(self, delta: jnp.ndarray) -> jnp.ndarray:
-        if self.residual is None:
-            return delta
-        return delta + self.residual
-
-    def carry_out(self, sent: jnp.ndarray, decoded: jnp.ndarray) -> None:
-        """sent = delta + old residual; decoded = what the wire delivered."""
-        self.residual = sent - decoded
-
 
 @dataclass
 class UploadPayload:
@@ -264,7 +79,9 @@ def encode_update(cid: int, version: int, n_epochs: int,
 
     Raw schemes (f32/bf16) ship the params themselves.  Delta-coded schemes
     (topk/int8) ship delta = params - base (+ EF residual); ``base_flat`` is
-    required and ``ef`` (if given) is updated in place with the new residual.
+    required — the flat model the client actually holds from its last
+    dispatch (the delivered reconstruction under lossy dispatch schemes) —
+    and ``ef`` (if given) is updated in place with the new residual.
     """
     if fmt.delta_coded:
         if base_flat is None:
@@ -303,7 +120,7 @@ class IngestBatcher:
     Correctness contract: committed slots are bit-identical to the eager
     per-chunk path (same decode, same base add, same destination windows —
     rows are disjoint across sessions and in-order within one).  The
-    server flushes before any ``commit`` so readers only ever see flushed
+    server flushes before any ``commit`` so readers only see flushed
     rows, and ``cancel_slot`` drops a dead upload's queued writes so a
     recycled row can never be corrupted by a stale write.
     """

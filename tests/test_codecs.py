@@ -1,0 +1,303 @@
+"""Shared codec layer: wire identity pins across the extraction.
+
+The chunk codecs used to live twice (uplink copy in transport.py, downlink
+consumption in dispatch.py); runtime/codecs.py is now the single registry
+both consume.  These tests pin the extraction:
+
+  * **byte-identity goldens** — for every static scheme, in both
+    directions, the encoded wire payload (chunk framing + payload arrays)
+    hashes to the exact digest the pre-refactor code produced (constants
+    below were generated at the pre-extraction commit), and the multicast
+    cache keys are unchanged;
+  * one validated spec grammar (``parse_spec``) shared by the uplink, the
+    downlink, and the legacy per-leaf compressor — same strings, same
+    error messages;
+  * checkpoint interchange — state dicts written by the pre-refactor
+    server schema (no rate-policy keys) restore cleanly.
+"""
+import hashlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.server import FLConfig, SeaflServer
+from repro.runtime import codecs, dispatch as dispatch_mod, transport
+from repro.runtime.codecs import (
+    CHUNK_HEADER_BYTES, CODECS, WireFormat, decode_concat, encode_flat,
+    make_wire_format, parse_spec,
+)
+from repro.runtime.compression import make_compressor
+from repro.runtime.dispatch import DispatchSession
+from repro.runtime.transport import encode_update
+
+# ---------------------------------------------------------------- goldens
+# Generated at the pre-refactor commit (PR 4 tree) over the deterministic
+# inputs built by _vectors(): P=5000, chunk_elems=2048, seed 42.  The codec
+# extraction must keep every static-scheme payload byte-identical to these.
+
+GOLD_P, GOLD_CHUNK = 5000, 2048
+
+GOLD_UPLINK = {
+    "f32": (20048,
+            "d7d8e721d20a22f2bef3af05e0e1391eedd5d2051b2ba70706f7873a892d1c22"),
+    "bf16": (10048,
+             "06417728e01c113bd7c92dc6afce209194414c6aac6bcf0c13157e2d72ddc73c"),
+    "topk:0.25": (10048,
+                  "543e617b89aec3c96de95e8caf28542a397728b1c837b6a087eb473c1518c70c"),
+    "int8": (5060,
+             "176c4f0ce7a9d7d9472ee2a96c1dc16a218b162cc8ab0bc0a39dc45cee84d922"),
+}
+
+GOLD_DISPATCH = {
+    "f32": {
+        "full": (20048,
+                 "4d40e5b2c37a10a4777bfaf8db69abde1cbf0f395766d92d3e410c128e9a5409"),
+    },
+    "bf16": {
+        "full": (10048,
+                 "60f01ddadf49b218b792cb6b395e9dd049bce15560aef68a732813fa302126cd"),
+    },
+    "topk:0.25": {
+        "full": (20048,
+                 "4d40e5b2c37a10a4777bfaf8db69abde1cbf0f395766d92d3e410c128e9a5409"),
+        "delta": (10048,
+                  "543e617b89aec3c96de95e8caf28542a397728b1c837b6a087eb473c1518c70c"),
+        "cache_key": (0, 1, "topk", 0.25, 2048),
+        "residual":
+            "4b1857c030be1e07d0f6e57bb9375fe971cfbcaa6c25ad8291813d6b77309d11",
+    },
+    "int8": {
+        "full": (20048,
+                 "4d40e5b2c37a10a4777bfaf8db69abde1cbf0f395766d92d3e410c128e9a5409"),
+        "delta": (5060,
+                  "176c4f0ce7a9d7d9472ee2a96c1dc16a218b162cc8ab0bc0a39dc45cee84d922"),
+        "cache_key": (0, 1, "int8", 0.1, 2048),
+        "residual":
+            "c5552735dc0d1a5cf11f1fd5f812f3c5e275963228b1adaab1e73cbbb0e72bd6",
+    },
+}
+
+
+def _vectors():
+    rng = np.random.default_rng(42)
+    base = jnp.asarray(rng.normal(size=GOLD_P).astype(np.float32))
+    params = base + 0.1 * jnp.asarray(
+        rng.normal(size=GOLD_P).astype(np.float32))
+    return base, params
+
+
+def _digest(chunks):
+    """Canonical digest of a wire payload: framing + payload arrays."""
+    h = hashlib.sha256()
+    for c in chunks:
+        h.update(np.int64(c.seq).tobytes() + np.int64(c.start).tobytes()
+                 + np.int64(c.length).tobytes())
+        p = c.payload
+        if isinstance(p, dict):
+            for k in sorted(p):
+                h.update(np.asarray(p[k]).tobytes())
+        else:
+            h.update(np.asarray(p).tobytes())
+    return h.hexdigest()
+
+
+@pytest.mark.parametrize("spec", sorted(GOLD_UPLINK))
+def test_uplink_payload_byte_identical_to_pre_refactor(spec):
+    base, params = _vectors()
+    fmt = make_wire_format(spec, GOLD_CHUNK)
+    pl = encode_update(0, 0, 1, params, fmt,
+                       base_flat=base if fmt.delta_coded else None)
+    nbytes, sha = GOLD_UPLINK[spec]
+    assert pl.nbytes == nbytes
+    assert sum(c.nbytes for c in pl.chunks) == nbytes
+    assert _digest(pl.chunks) == sha
+
+
+@pytest.mark.parametrize("spec", sorted(GOLD_DISPATCH))
+def test_dispatch_payload_byte_identical_to_pre_refactor(spec):
+    base, params = _vectors()
+    ring = {0: base, 1: params}
+    gold = GOLD_DISPATCH[spec]
+    sess = DispatchSession(make_wire_format(spec, GOLD_CHUNK), history=4)
+    full = sess.encode(7, 0, ring)
+    assert (full.nbytes, _digest(full.chunks)) == gold["full"]
+    sess.deliver(full)
+    delta = sess.encode(7, 1, ring)
+    if "delta" not in gold:                      # raw schemes re-snapshot
+        return
+    assert not delta.full
+    assert (delta.nbytes, _digest(delta.chunks)) == gold["delta"]
+    # the multicast encode-cache key shape survives the extraction (hop
+    # sharing would silently fragment if it drifted)
+    assert sess._cache_key(0, 1) == gold["cache_key"]
+    assert hashlib.sha256(
+        np.asarray(delta.residual).tobytes()).hexdigest() == gold["residual"]
+
+
+def test_both_directions_consume_one_codec_layer():
+    """No chunk-codec implementation remains duplicated: transport and
+    dispatch resolve encode/decode through the same registry objects."""
+    assert transport.encode_flat is codecs.encode_flat
+    assert transport.decode_concat is codecs.decode_concat
+    assert transport.make_wire_format is codecs.make_wire_format
+    assert transport.Chunk is codecs.Chunk
+    assert transport.WireFormat is codecs.WireFormat
+    assert transport.FlatErrorFeedback is codecs.FlatErrorFeedback
+    assert dispatch_mod.encode_flat is codecs.encode_flat
+    assert dispatch_mod.decode_concat is codecs.decode_concat
+    assert set(CODECS) == {"f32", "bf16", "topk", "int8"}
+
+
+@pytest.mark.parametrize("spec", ["f32", "bf16", "topk:0.3", "int8"])
+def test_codec_roundtrip_and_byte_law(spec):
+    """encode_flat -> decode_concat round-trips (exactly for f32, within
+    scheme tolerance otherwise) and every chunk's nbytes matches the
+    closed-form byte law."""
+    rng = np.random.default_rng(3)
+    vec = jnp.asarray(rng.normal(size=1000).astype(np.float32))
+    fmt = make_wire_format(spec, 256)
+    chunks = encode_flat(vec, fmt)
+    assert [c.start for c in chunks] == [0, 256, 512, 768]
+    for c in chunks:
+        assert c.nbytes == fmt.chunk_wire_bytes(c.length)
+    assert sum(c.nbytes for c in chunks) == fmt.payload_bytes(1000)
+    out = np.asarray(decode_concat(chunks, fmt))
+    if spec == "f32":
+        np.testing.assert_array_equal(out, np.asarray(vec))
+    elif spec == "bf16":
+        np.testing.assert_allclose(out, np.asarray(vec), atol=0.02)
+    else:
+        # lossy delta codecs: decoded mass is a strict subset/quantisation
+        assert np.max(np.abs(out - np.asarray(vec))) <= \
+            np.max(np.abs(np.asarray(vec)))
+
+
+def test_kept_coeffs_matches_byte_law():
+    fmt = make_wire_format("topk:0.25", 256)
+    p = 1000
+    kept = fmt.kept_coeffs(p)
+    assert kept == 3 * 64 + 58                   # 3 full chunks + 232 tail
+    assert fmt.payload_bytes(p) == 8 * kept + 4 * CHUNK_HEADER_BYTES
+    assert make_wire_format("int8", 256).kept_coeffs(p) is None
+    assert make_wire_format("f32", 256).kept_coeffs(p) is None
+
+
+# -------------------------------------------------------------- parse_spec
+
+def test_parse_spec_grammar():
+    assert parse_spec(None) == ("f32", None)
+    assert parse_spec("none") == ("f32", None)
+    assert parse_spec("f32") == ("f32", None)
+    assert parse_spec("bf16") == ("bf16", None)
+    assert parse_spec("topk") == ("topk", 0.1)
+    assert parse_spec("topk:0.25") == ("topk", 0.25)
+    assert parse_spec("int8") == ("int8", None)
+
+
+@pytest.mark.parametrize("bad", ["fp8", "topk:0", "topk:1.5", "topk:x",
+                                 "int8:4", "bf16:2", ""])
+def test_parse_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_spec(bad)
+
+
+def test_spec_errors_unified_across_consumers():
+    """FLConfig.compression, FLConfig.dispatch_compression and the legacy
+    per-leaf compressor all fail through parse_spec with the *same*
+    message for the same bad spec (the divergence the refactor removes)."""
+    def msg(fn):
+        with pytest.raises(ValueError) as ei:
+            fn()
+        return str(ei.value)
+
+    params = {"w": jnp.zeros((4,))}
+    sizes = {0: 1}
+    bad = "topk:7"
+    m_up = msg(lambda: SeaflServer(FLConfig(n_clients=1, compression=bad),
+                                   params, sizes))
+    m_down = msg(lambda: SeaflServer(
+        FLConfig(n_clients=1, dispatch_compression=bad), params, sizes))
+    m_leaf = msg(lambda: make_compressor(bad))
+    assert m_up == m_down == m_leaf == "topk ratio must be in (0, 1], got 7.0"
+    # raw schemes are wire-level only — the per-leaf factory says so
+    with pytest.raises(ValueError, match="no per-leaf compressor"):
+        make_compressor("bf16")
+
+
+def test_wire_format_defaults_stable():
+    """The WireFormat surface other modules key caches on."""
+    fmt = make_wire_format(None)
+    assert fmt == WireFormat("f32", codecs.DEFAULT_CHUNK_ELEMS, 0.1)
+    assert not fmt.delta_coded
+    assert make_wire_format("topk:0.5", 64).delta_coded
+
+
+# ------------------------------------------------- checkpoint interchange
+
+def _make_server(**kw):
+    params = {"w": jnp.zeros((11, 7)), "b": {"c": jnp.zeros((13,))}}
+    cfg = FLConfig(algorithm="seafl", n_clients=8, concurrency=4,
+                   buffer_size=2, staleness_limit=4.0, seed=0, **kw)
+    return SeaflServer(cfg, params, {i: 10 for i in range(8)})
+
+
+def _drive(s, rounds=3, rng=None):
+    rng = rng or np.random.default_rng(5)
+    s.start()
+    for _ in range(rounds * s.cfg.buffer_size):
+        cid = sorted(s.active)[0]
+        s.deliver_dispatch(cid, s.encode_dispatch(cid))
+        w = jnp.asarray(rng.normal(size=s.packer.size).astype(np.float32))
+        s.on_update(cid, s.packer.unpack(
+            s.packer.pack(s.dispatch_model(cid)) + 0.1 * w), 5)
+
+
+def test_pre_refactor_state_dict_restores():
+    """A checkpoint written by the pre-refactor schema — no 'drift' /
+    'ratio_by_version' keys in the server state, no policy fields at all —
+    restores into the refactored server and keeps running."""
+    kw = dict(compression="topk:0.2", dispatch_compression="topk:0.1",
+              dispatch_history=4)
+    s = _make_server(**kw)
+    _drive(s)
+    state, trees = s.state_dict(), s.checkpoint_trees()
+    # strip everything the refactor added: this is exactly the PR 4 schema
+    pre = {k: v for k, v in state.items()
+           if k not in ("drift", "ratio_by_version")}
+    assert set(pre) < set(state)
+
+    s2 = _make_server(**kw)
+    s2.load_state(pre, trees)
+    assert s2.round == s.round
+    assert s2.dispatch.versions == s.dispatch.versions
+    np.testing.assert_array_equal(np.asarray(s2.global_flat),
+                                  np.asarray(s.global_flat))
+    _drive(s2, rounds=1)                         # still serves dispatches
+    assert s2.round > s.round
+
+
+def test_refactored_state_dict_roundtrip_with_policy():
+    """The new schema round-trips: drift EMA + per-version chosen ratios
+    survive restore, and a restored cold cache re-encodes in-ring hops at
+    the checkpointed ratios (byte-identical payloads)."""
+    kw = dict(dispatch_compression="topk:0.1", dispatch_history=4,
+              dispatch_ratio_policy="drift",
+              drift_band_edges=(0.9, 1.5),
+              drift_band_ratios=(0.02, 0.05, 0.1))
+    s = _make_server(**kw)
+    _drive(s, rounds=4)
+    assert s._ratio_by_version                  # policy actually chose
+    state, trees = s.state_dict(), s.checkpoint_trees()
+
+    s2 = _make_server(**kw)
+    s2.load_state(state, trees)
+    assert s2._ratio_by_version == s._ratio_by_version
+    assert s2._drift.ema == pytest.approx(s._drift.ema)
+    cid = next(iter(s.dispatch.versions))
+    s.active[cid] = s.round
+    s2.active[cid] = s2.round
+    a = s.encode_dispatch(cid)
+    b = s2.encode_dispatch(cid)
+    assert (a.nbytes, a.ratio) == (b.nbytes, b.ratio)
+    assert _digest(a.chunks) == _digest(b.chunks)

@@ -1,0 +1,282 @@
+"""Drift-adaptive rate policy + resync economics + cross-direction EF.
+
+Covers the policy layer the wire stack now shares: deterministic drift
+banding (same drift sequence -> same discrete ratios), the chosen ratio
+recorded per dispatch and per round in the simulator history, downlink
+byte savings vs the static ratio with multicast cache sharing intact
+within a band, the byte-budget resync mode, and the cross-direction
+error-feedback coupling (uplink deltas measured against the *delivered*
+dispatch reconstruction, not the exact ring snapshot).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.server import FLConfig, SeaflServer
+from repro.experiment import ExperimentConfig, run_experiment
+from repro.runtime.codecs import make_wire_format
+from repro.runtime.dispatch import DispatchSession
+from repro.runtime.policy import (
+    DriftTracker, RatePolicy, needs_resync,
+)
+from repro.runtime.simulator import SimConfig
+
+
+def make_server(algorithm="seafl", n=12, M=6, K=3, beta=4.0, **kw):
+    params = {"w": jnp.zeros((11, 7)), "b": {"c": jnp.zeros((13,))}}
+    cfg = FLConfig(algorithm=algorithm, n_clients=n, concurrency=M,
+                   buffer_size=K, staleness_limit=beta, seed=0, **kw)
+    return SeaflServer(cfg, params, {i: 10 * (i + 1) for i in range(n)})
+
+
+def bench_experiment(max_rounds=10, **fl_kw):
+    """The fig7/bench-shaped workload (same shape as BENCH_dispatch)."""
+    fl = FLConfig(algorithm="seafl", n_clients=10, concurrency=5,
+                  buffer_size=2, staleness_limit=6, local_epochs=2,
+                  local_lr=0.05, batch_size=16, seed=7,
+                  dispatch_compression="topk:0.1", dispatch_history=8,
+                  **fl_kw)
+    cfg = ExperimentConfig(
+        dataset="tiny", n_train=300, n_test=60, model="mlp", fl=fl,
+        sim=SimConfig(speed_model="pareto", seed=7,
+                      bandwidth_model="pareto", up_mbps=5.0, down_mbps=0.5),
+        seed=7)
+    sim, _ = run_experiment(cfg, max_rounds=max_rounds)
+    return sim
+
+
+# ------------------------------------------------------------ unit: bands
+
+def test_rate_policy_bands_deterministic():
+    pol = RatePolicy(mode="drift", edges=(0.8, 1.6),
+                     ratios=(0.02, 0.05, 0.1))
+    drifts = [1.0, 1.1, 0.5, 3.0, 1.0, 0.9, 0.2]
+
+    def run():
+        tr = DriftTracker(beta=0.8)
+        return [pol.ratio_for(tr.observe(d)) for d in drifts]
+
+    once, again = run(), run()
+    assert once == again                       # pure function of the drifts
+    assert once[0] == 0.05                     # first observation: mid band
+    assert set(once) <= set(pol.ratios)        # always from the discrete set
+    assert 0.1 in once and 0.02 in once        # both extremes exercised
+
+
+def test_rate_policy_validation():
+    with pytest.raises(ValueError, match="ratios"):
+        RatePolicy(mode="drift", edges=(1.0,), ratios=(0.1,))
+    with pytest.raises(ValueError, match="ascending"):
+        RatePolicy(mode="drift", edges=(2.0, 1.0), ratios=(0.1,) * 3)
+    with pytest.raises(ValueError, match=r"in \(0, 1\]"):
+        RatePolicy(mode="drift", edges=(1.0,), ratios=(0.1, 1.5))
+    with pytest.raises(ValueError, match="ratio policy"):
+        RatePolicy(mode="adaptive")
+    # static mode never chooses (callers keep their configured ratio)
+    assert RatePolicy(mode="static").ratio_for(2.0) is None
+
+
+def test_drift_tracker_checkpoint_roundtrip():
+    tr = DriftTracker(beta=0.7)
+    xs = [tr.observe(d) for d in (2.0, 1.0, 4.0)]
+    tr2 = DriftTracker.from_state(tr.state_dict(), beta=0.7)
+    assert tr2.ema == tr.ema
+    assert tr2.observe(3.0) == tr.observe(3.0)
+    assert xs[0] == 1.0
+
+
+def test_config_validation_requires_topk():
+    with pytest.raises(ValueError, match="dispatch_ratio_policy"):
+        make_server(dispatch_compression="int8",
+                    dispatch_ratio_policy="drift")
+    with pytest.raises(ValueError, match="uplink_ratio_policy"):
+        make_server(compression="bf16", uplink_ratio_policy="drift")
+    with pytest.raises(ValueError, match="dispatch_resync_mode"):
+        make_server(dispatch_compression="topk:0.1",
+                    dispatch_resync_mode="energy")
+
+
+# -------------------------------------------------- unit: resync economics
+
+def test_needs_resync_norm_vs_bytes():
+    fmt = make_wire_format("topk:0.1", 256)
+    p = 2048
+    kw = dict(fmt=fmt, param_size=p, threshold=4.0)
+    # norm mode: trips strictly at |r| > 4|d|
+    assert not needs_resync("norm", r_norm=3.9, hop_norm=1.0, **kw)
+    assert needs_resync("norm", r_norm=4.1, hop_norm=1.0, **kw)
+    # bytes mode trips earlier: the projected re-ship (8*k*(r/d)^2) crosses
+    # 4x payload bytes near r/d ~ 2.1 (headers push it past sqrt(4))
+    assert not needs_resync("bytes", r_norm=2.0, hop_norm=1.0, **kw)
+    assert needs_resync("bytes", r_norm=2.3, hop_norm=1.0, **kw)
+    # dense schemes have no coefficient budget: bytes falls back to norm
+    dense = dict(fmt=make_wire_format("int8", 256), param_size=p,
+                 threshold=4.0)
+    assert not needs_resync("bytes", r_norm=3.9, hop_norm=1.0, **dense)
+    assert needs_resync("bytes", r_norm=4.1, hop_norm=1.0, **dense)
+    # threshold <= 0 = resync every delta, both modes (the PR 4 pin)
+    assert needs_resync("norm", r_norm=0.0, hop_norm=1.0, fmt=fmt,
+                        param_size=p, threshold=0.0)
+    assert needs_resync("bytes", r_norm=0.0, hop_norm=1.0, fmt=fmt,
+                        param_size=p, threshold=0.0)
+    with pytest.raises(ValueError, match="resync mode"):
+        needs_resync("energy", r_norm=1.0, hop_norm=1.0, threshold=1.0)
+
+
+def test_bytes_resync_bounds_residual_over_lossy_hops():
+    """Same shape as the PR 4 norm-mode boundedness test: a client riding
+    39 shared lossy hops keeps a bounded residual, with the byte-budget
+    trigger firing at least once and earlier than the norm trigger."""
+    rng = np.random.default_rng(11)
+    P = 4000
+    ring = {0: jnp.asarray(rng.normal(size=P).astype(np.float32))}
+
+    def drive(mode):
+        sess = DispatchSession(make_wire_format("topk:0.05", 512),
+                               history=50, resync=4.0, resync_mode=mode)
+        full = sess.encode(0, 0, ring)
+        sess.deliver(full)
+        norms = []
+        for v in range(1, 40):
+            if v not in ring:
+                ring[v] = ring[v - 1] + 0.05 * jnp.asarray(
+                    rng.normal(size=P).astype(np.float32))
+            pay = sess.encode(0, v, ring)
+            sess.deliver(pay)
+            r = sess.residuals.get(0)
+            norms.append(0.0 if r is None else float(jnp.linalg.norm(r)))
+        return sess, norms
+
+    sess_b, norms_b = drive("bytes")
+    sess_n, norms_n = drive("norm")
+    hop = float(jnp.linalg.norm(ring[39] - ring[38]))
+    assert sess_b.resync_dispatches >= 1
+    assert max(norms_b) <= 4.0 * hop * 1.5          # bounded, not a walk
+    # byte-budget trips earlier than the norm threshold -> at least as many
+    # fold-ins and a tighter residual ceiling
+    assert sess_b.resync_dispatches >= sess_n.resync_dispatches
+    assert max(norms_b) <= max(norms_n) + 1e-6
+
+
+# ----------------------------------------------------- e2e: adaptive ratio
+
+def test_drift_policy_records_and_saves_bytes():
+    """The bench workload under the drift policy: every chosen ratio comes
+    from the configured discrete set, the simulator records it per round
+    and per dispatch, downlink bytes land below the static topk:0.1 run,
+    and the multicast cache hit rate is unchanged (sharing within a band
+    survives adaptivity)."""
+    static = bench_experiment(dispatch_ratio_policy="static")
+    drift = bench_experiment(dispatch_ratio_policy="drift")
+
+    ratios = set(FLConfig.drift_band_ratios)
+    assert drift.ratio_log                        # per-dispatch records
+    assert {r["ratio"] for r in drift.ratio_log} <= ratios
+    hist = [h["dispatch_ratio"] for h in drift.history]
+    assert all(r in ratios for r in hist)
+    assert all(h["dispatch_ratio"] == 0.1 for h in static.history)
+
+    assert drift.server.bytes_downloaded < static.server.bytes_downloaded
+    assert drift.server.dispatch.cache_info()["hit_rate"] == \
+        pytest.approx(static.server.dispatch.cache_info()["hit_rate"])
+    # learning stays comparable: the adaptive run is not byte-starved
+    assert max(h.get("acc", 0.0) for h in drift.history) >= \
+        0.7 * max(h.get("acc", 0.0) for h in static.history)
+
+
+def test_drift_bands_share_multicast_hops():
+    """Two clients on the same hop dispatched at the same banded ratio
+    share one cached encode; a different band fragments to a new entry —
+    never corrupts the first."""
+    rng = np.random.default_rng(2)
+    P = 1000
+    ring = {0: jnp.asarray(rng.normal(size=P).astype(np.float32))}
+    ring[1] = ring[0] + 0.02 * jnp.asarray(
+        rng.normal(size=P).astype(np.float32))
+    sess = DispatchSession(make_wire_format("topk:0.1", 256), history=4)
+    for cid in (0, 1, 2):
+        sess.versions[cid] = 0
+    a = sess.encode(0, 1, ring, ratio=0.05)
+    b = sess.encode(1, 1, ring, ratio=0.05)
+    assert (sess.cache_misses, sess.cache_hits) == (1, 1)
+    assert a.nbytes == b.nbytes and a.ratio == b.ratio == 0.05
+    assert a.chunks is b.chunks                   # literally the fan-out
+    c = sess.encode(2, 1, ring, ratio=0.1)
+    assert sess.cache_misses == 2 and c.ratio == 0.1
+    assert c.nbytes > a.nbytes
+
+
+def test_uplink_drift_policy_ships_fewer_bytes():
+    static = bench_experiment(compression="topk:0.1",
+                              uplink_ratio_policy="static")
+    drift = bench_experiment(compression="topk:0.1",
+                             dispatch_ratio_policy="drift",
+                             uplink_ratio_policy="drift")
+    assert drift.server.bytes_uploaded < static.server.bytes_uploaded
+
+
+# -------------------------------------------- e2e: cross-direction EF fix
+
+def test_uplink_base_is_delivered_reconstruction():
+    """Under a lossy dispatch scheme the uplink delta base is the held
+    reconstruction ``ring[v] - dispatch_residual``; exact (f32) dispatch
+    keeps the ring snapshot itself."""
+    s = make_server(compression="topk:0.5",
+                    dispatch_compression="topk:0.2", dispatch_resync=1e9)
+    s.start()
+    cid = sorted(s.active)[0]
+    s.deliver_dispatch(cid, s.encode_dispatch(cid))   # full: exact
+    np.testing.assert_array_equal(
+        np.asarray(s._uplink_base(cid, s.active[cid])),
+        np.asarray(s.flat_at(s.active[cid])))
+
+    s2 = make_server(compression="topk:0.5", dispatch_compression="f32")
+    s2.start()
+    cid2 = sorted(s2.active)[0]
+    s2.deliver_dispatch(cid2, s2.encode_dispatch(cid2))
+    assert s2._uplink_base(cid2, s2.active[cid2]) is \
+        s2.flat_at(s2.active[cid2])
+
+
+def test_cross_direction_ef_bounded_and_unbiased():
+    """One client rides many lossy dispatch->train->lossy upload cycles
+    with multicast residual accumulation never resynced (resync=1e9): the
+    dispatch residual grows, but the ingested buffer slot keeps tracking
+    the client's true params (the old snapshot-base coupling would offset
+    every slot by the growing dispatch residual), and the uplink EF
+    residual stays bounded."""
+    rng = np.random.default_rng(9)
+    s = make_server(K=2, M=2, n=4, compression="topk:0.8",
+                    dispatch_compression="topk:0.02", dispatch_resync=1e9,
+                    dispatch_history=128)
+    s.start()
+    cids = sorted(s.active)
+    probe = cids[0]
+    slot_errs, ef_norms, disp_norms = [], [], []
+    for step in range(40):
+        for cid in cids:
+            if cid not in s.active:          # re-dispatch after aggregation
+                s.mark_dispatched(cid)
+            s.deliver_dispatch(cid, s.encode_dispatch(cid))
+        for cid in cids:
+            held = s.packer.pack(s.dispatch_model(cid))
+            w_flat = held + 0.1 * jnp.asarray(
+                rng.normal(size=s.packer.size).astype(np.float32))
+            payload = s.encode_update(cid, s.packer.unpack(w_flat), 5)
+            agg = s.ingest_payload(payload)
+            if cid == probe:
+                if agg is None and len(s.buffer):
+                    row = s.buffer.row(len(s.buffer) - 1)
+                    slot_errs.append(float(jnp.linalg.norm(row - w_flat)))
+                ef_norms.append(
+                    float(jnp.linalg.norm(s._ef[probe].residual)))
+                r = s.dispatch.residuals.get(probe)
+                disp_norms.append(
+                    0.0 if r is None else float(jnp.linalg.norm(r)))
+    # the dispatch residual really accumulated (the hazard is live)...
+    assert disp_norms[-1] > 3 * max(slot_errs[-5:])
+    # ...but slot error is EF-bounded, far below the dispatch residual
+    assert slot_errs[-1] < 0.5 * disp_norms[-1]
+    assert max(slot_errs[-5:]) <= 2.0 * max(slot_errs[:5])
+    # and the uplink EF residual is bounded (no cross-direction leak)
+    assert max(ef_norms[-5:]) <= 2.0 * max(ef_norms[:5]) + 1e-6
