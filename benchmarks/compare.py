@@ -1,12 +1,16 @@
 """Benchmark regression gate: current BENCH_*.json vs committed baselines.
 
-CI runs the wire benchmarks (``python -m benchmarks.run --only wire``), then
-this module compares the freshly written ``benchmarks/BENCH_ingest.json``
-and ``benchmarks/BENCH_dispatch.json`` against the committed snapshots in
+CI runs the wire benchmarks (``python -m benchmarks.run --only wire``) and
+the fleet sweep (``--only fleet``), then this module compares the freshly
+written ``benchmarks/BENCH_ingest.json``, ``BENCH_dispatch.json`` and
+``BENCH_fleet.json`` against the committed snapshots in
 ``benchmarks/baselines/`` and **fails** (exit 1) when any gated throughput
 metric — ingest MB/s (per-chunk, coalesced, or batched-flush) or dispatch
 decode+apply MB/s — regresses more than ``THRESHOLD`` (20%) below its
-baseline.  Non-throughput fields (wire bytes, hit rates, speedup ratios)
+baseline.  The fleet report carries its own gates (``_gate_fleet``):
+cohort-mode state must stay ~O(cohorts) across the fleet sweep, cohort vs
+per-client accuracy parity must hold at every size, and the 10^4-point
+per-round wall clock must not regress >20% over baseline.  Non-throughput fields (wire bytes, hit rates, speedup ratios)
 are reported in the delta table but never gate: byte counts are asserted
 exactly by the test suite, and ratios are derived from the gated numbers.
 
@@ -33,19 +37,25 @@ import sys
 
 BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 BASELINE_DIR = os.path.join(BENCH_DIR, "baselines")
-FILES = ("BENCH_ingest.json", "BENCH_dispatch.json")
+FILES = ("BENCH_ingest.json", "BENCH_dispatch.json", "BENCH_fleet.json")
 THRESHOLD = 0.20          # fail below (1 - THRESHOLD) x baseline
+FLEET_STATE_GROWTH_MAX = 3.0   # cohort state across the 10^2..10^5 sweep
+FLEET_ACC_PARITY = 1e-2        # |acc(cohort) - acc(per-client)| per size
+FLEET_WALL_GATE_SIZE = "10000"  # the sweep point wall-clock gated vs base
 
 # metric keys gated per schemes[...] entry, by file
 GATED = {
     "BENCH_ingest.json": (
         "ingest_MBps", "ingest_MBps_coalesced", "stream_batched_MBps"),
     "BENCH_dispatch.json": ("apply_MBps",),
+    "BENCH_fleet.json": (),   # gated via _gate_fleet, not per-scheme keys
 }
 # informational (never gating) keys shown in the table when present
 INFO = {
-    "BENCH_ingest.json": ("batch_flush_speedup", "coalesce_speedup"),
+    "BENCH_ingest.json": ("batch_flush_speedup", "coalesce_speedup",
+                          "stream_auto_MBps", "auto_vs_batched_speedup"),
     "BENCH_dispatch.json": (),
+    "BENCH_fleet.json": (),
 }
 
 
@@ -69,6 +79,11 @@ def _flatten(fname: str, data: dict) -> tuple[dict, dict]:
                 entry.get("encode_cache_hit_rate") is not None:
             info[f"hit_rate_depth{depth}/encode_cache_hit_rate"] = \
                 float(entry["encode_cache_hit_rate"])
+    for spec, entry in data.get("resync_batch", {}).items():
+        if isinstance(entry, dict) and \
+                entry.get("resync_batch_speedup") is not None:
+            info[f"resync_batch/{spec}/resync_batch_speedup"] = \
+                float(entry["resync_batch_speedup"])
     return gated, info
 
 
@@ -112,6 +127,72 @@ def _gate_adaptive_ratio(data: dict, rows: list, failures: list) -> None:
                      None, float(saving), None, "info"))
 
 
+def _gate_fleet(data: dict, base: dict, rows: list, failures: list) -> None:
+    """Gate the fleet-size sweep (BENCH_fleet.json).
+
+    Two *within-report* invariants plus one vs-baseline gate:
+
+    * cohort-mode server array state across the 10^2 -> 10^5 sweep must
+      stay ~O(cohorts): max/min ``server_array_bytes`` ratio bounded by
+      ``FLEET_STATE_GROWTH_MAX`` (a per-client leak would scale it with
+      the fleet, orders of magnitude past the bound);
+    * final-accuracy parity between ``cohorts='on'`` and ``'off'`` must
+      hold at every sweep size (|delta| <= ``FLEET_ACC_PARITY``);
+    * cohort per-round wall clock at the 10^4 sweep point must not
+      regress more than ``THRESHOLD`` over the committed baseline
+      (skipped with status "new" when the baseline lacks the point).
+    """
+    cohort = data.get("modes", {}).get("cohort", {})
+    if not cohort:
+        failures.append("fleet: cohort mode missing from the current "
+                        "report (did fleet_bench change?)")
+        return
+    states = [e["resident"]["server_array_bytes"] for e in cohort.values()
+              if e.get("resident", {}).get("server_array_bytes")]
+    if states:
+        growth = max(states) / max(min(states), 1)
+        ok = growth <= FLEET_STATE_GROWTH_MAX
+        if not ok:
+            failures.append(
+                f"fleet/cohort_state_growth: server array state grew "
+                f"{growth:.2f}x across the fleet sweep (> "
+                f"{FLEET_STATE_GROWTH_MAX:.1f}x bound) — cohort state is "
+                f"no longer ~O(cohorts)")
+        rows.append(("fleet/cohort_state_growth(<=" +
+                     f"{FLEET_STATE_GROWTH_MAX:.0f}x)", None, growth,
+                     None, "ok" if ok else "REGRESSED"))
+    for size, parity in sorted(data.get("acc_parity", {}).items(),
+                               key=lambda kv: int(kv[0])):
+        if parity is None:
+            failures.append(f"fleet/n{size}: accuracy parity missing")
+            continue
+        ok = parity <= FLEET_ACC_PARITY
+        if not ok:
+            failures.append(
+                f"fleet/n{size}: cohort vs per-client final accuracy "
+                f"differs by {parity:.4f} (> {FLEET_ACC_PARITY} parity "
+                f"bound)")
+        rows.append((f"fleet/n{size}/acc_parity", None, parity, None,
+                     "ok" if ok else "REGRESSED"))
+    cur_wall = cohort.get(FLEET_WALL_GATE_SIZE, {}).get("wall_per_round_s")
+    base_wall = (base or {}).get("modes", {}).get("cohort", {}) \
+        .get(FLEET_WALL_GATE_SIZE, {}).get("wall_per_round_s")
+    tag = f"fleet/n{FLEET_WALL_GATE_SIZE}/wall_per_round_s"
+    if cur_wall is None:
+        failures.append(f"{tag}: missing from the current report")
+    elif base_wall is None:
+        rows.append((tag, None, cur_wall, None, "new"))
+    else:
+        delta = (cur_wall - base_wall) / base_wall
+        ok = cur_wall <= (1.0 + THRESHOLD) * base_wall
+        if not ok:
+            failures.append(
+                f"{tag}: {cur_wall:.3f}s vs baseline {base_wall:.3f}s "
+                f"({delta:+.1%} > +{THRESHOLD:.0%} gate)")
+        rows.append((tag, base_wall, cur_wall, delta,
+                     "ok" if ok else "REGRESSED"))
+
+
 def compare(threshold: float = THRESHOLD) -> tuple[list[tuple], list[str]]:
     """-> (table rows: (metric, baseline, current, delta, status), failures)."""
     rows, failures = [], []
@@ -126,10 +207,13 @@ def compare(threshold: float = THRESHOLD) -> tuple[list[tuple], list[str]]:
             failures.append(f"{fname}: no committed baseline at {base_path}")
             continue
         cur_data = _load(cur_path)
+        base_data = _load(base_path)
         cur_g, cur_i = _flatten(fname, cur_data)
-        base_g, base_i = _flatten(fname, _load(base_path))
+        base_g, base_i = _flatten(fname, base_data)
         if fname == "BENCH_dispatch.json":
             _gate_adaptive_ratio(cur_data, rows, failures)
+        if fname == "BENCH_fleet.json":
+            _gate_fleet(cur_data, base_data, rows, failures)
         for metric in sorted(set(base_g) | set(cur_g)):
             tag = f"{fname.removeprefix('BENCH_').removesuffix('.json')}" \
                   f"/{metric}"

@@ -1,0 +1,177 @@
+"""Fleet-size sweep: server resident state + per-round wall clock vs fleet.
+
+The cohort layer's whole claim (ISSUE 6 / ROADMAP north star) is that
+server-side fleet state is O(cohorts), not O(clients): one shared EF
+residual + one cached fold encode per (held version, drift band) cohort,
+and one edge-combined (P,) partial per live version entering the (K, P)
+buffer.  This bench sweeps the simulated fleet 10^2 -> 10^5 clients and
+records, for ``cohorts='on'`` and ``cohorts='off'`` on an otherwise
+identical workload:
+
+  * the server-resident array state breakdown
+    (``SeaflServer.resident_state_bytes``) at the end of the run,
+  * warm per-round wall-clock seconds (rounds 3+ — the first two rounds
+    absorb jit tracing),
+  * final accuracy (mean of the last 5 round evals, smoothing the
+    single-eval noise of the tiny workload).
+
+The concurrency M scales with the fleet (M ~ n/50, capped) like a real
+deployment; the aggregation trigger K stays fixed so per-round server
+work is comparable across sizes.  Real training stays bounded by sharing
+``_ACTUAL_CLIENTS`` concrete Client objects across the simulated fleet
+(learning is still real — what varies with n is the *state and
+scheduling* surface, which is exactly what this bench measures).
+
+Emits BENCH_fleet.json; ``benchmarks/compare.py`` gates it: cohort-mode
+state growth across the sweep must stay ~O(cohorts) (bounded ratio), the
+cohort/per-client accuracy parity must hold at every size, and the
+cohort-mode per-round wall clock at the 10^4 point must not regress >20%
+vs the committed baseline.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BENCH_FLEET_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_fleet.json")
+
+SIZES = (100, 1_000, 10_000, 100_000)
+ROUNDS = 16
+WARM_ROUNDS = 2          # excluded from the per-round wall clock
+_ACTUAL_CLIENTS = 32     # concrete Client objects shared across the fleet
+
+
+def _concurrency(n: int) -> int:
+    return min(max(16, n // 50), 1024)
+
+
+def _build(n_clients: int, cohorts: str, seed: int = 0):
+    from repro.core.client import Client, make_epoch_fn
+    from repro.core.server import FLConfig, SeaflServer
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import make_image_dataset
+    from repro.models.cnn import MODELS
+    from repro.runtime.simulator import FLSimulation, SimConfig
+
+    train, test, meta = make_image_dataset("tiny", 2000, 1000, seed=seed)
+    model = MODELS["mlp"](num_classes=meta["n_classes"],
+                          d_in=meta["img"] ** 2 * meta["channels"])
+    parts = dirichlet_partition(train["y"], _ACTUAL_CLIENTS, 0.3, seed=seed)
+    epoch_fn = make_epoch_fn(model.loss)
+    actual = {
+        cid: Client(cid, {k: v[ix] for k, v in train.items()}, epoch_fn,
+                    n_samples=len(ix), batch_size=32, seed=seed)
+        for cid, ix in enumerate(parts)
+    }
+    # the simulated fleet maps onto the concrete clients round-robin: state
+    # (versions, residuals, cohorts, EF) is tracked per simulated cid, so
+    # fleet-state scaling is real even though the training data repeats
+    clients = {cid: actual[cid % _ACTUAL_CLIENTS] for cid in range(n_clients)}
+    fl = FLConfig(algorithm="seafl", n_clients=n_clients,
+                  concurrency=_concurrency(n_clients), buffer_size=8,
+                  staleness_limit=10, local_epochs=2, local_lr=0.05,
+                  batch_size=32, seed=seed,
+                  dispatch_compression="topk:0.1", dispatch_history=8,
+                  cohorts=cohorts)
+    params0 = model.init(jax.random.PRNGKey(seed))
+    server = SeaflServer(fl, params0,
+                         {cid: clients[cid].n_samples
+                          for cid in range(n_clients)})
+    test_j = {k: jnp.asarray(v) for k, v in test.items()}
+    acc_jit = jax.jit(model.accuracy)
+
+    def eval_fn(params):
+        return float(acc_jit(params, test_j))
+
+    sim = FLSimulation(server, clients, SimConfig(seed=seed),
+                       eval_fn=eval_fn, eval_every=1)
+    return sim
+
+
+def _run_one(n_clients: int, cohorts: str) -> dict:
+    sim = _build(n_clients, cohorts)
+    sim.run(max_rounds=WARM_ROUNDS)          # jit warmup rounds
+    t0 = time.perf_counter()
+    hist = sim.run(max_rounds=ROUNDS)
+    wall = time.perf_counter() - t0
+    rounds_timed = max(sim.server.round - WARM_ROUNDS, 1)
+    accs = [h["acc"] for h in hist if "acc" in h]
+    resident = sim.server.resident_state_bytes()
+    d = sim.server.dispatch
+    entry = {
+        "rounds": int(sim.server.round),
+        "wall_per_round_s": round(wall / rounds_timed, 4),
+        "final_acc": round(float(np.mean(accs[-5:])), 4) if accs else None,
+        "resident": resident,
+        "residual_entries": (d.table.stats()["residual_cohorts"]
+                             if hasattr(d, "table")
+                             else len(d.residuals)),
+        "tracked_clients": len(d.versions),
+    }
+    cs = sim.server.cohort_stats()
+    if cs is not None:
+        entry["cohorts"] = cs["cohorts"]
+        entry["edge_merges_total"] = cs["edge_merges_total"]
+        entry["cohort_table"] = d.table.stats()
+    return entry
+
+
+def bench_fleet():
+    """Sweep fleet sizes in both fleet-state modes; emit BENCH_fleet.json."""
+    rows = []
+    report: dict = {"sizes": list(SIZES), "rounds": ROUNDS,
+                    "modes": {"per_client": {}, "cohort": {}},
+                    "acc_parity": {}}
+    # throwaway run so one-time jit compiles (edge merge, batched encode)
+    # don't land inside the first measured sweep point
+    _run_one(64, "on")
+    for n in SIZES:
+        off = _run_one(n, "off")
+        on = _run_one(n, "on")
+        report["modes"]["per_client"][str(n)] = off
+        report["modes"]["cohort"][str(n)] = on
+        parity = (abs(on["final_acc"] - off["final_acc"])
+                  if on["final_acc"] is not None
+                  and off["final_acc"] is not None else None)
+        report["acc_parity"][str(n)] = (round(parity, 4)
+                                        if parity is not None else None)
+        rows.append((
+            f"fleet/n{n}",
+            f"{on['resident']['server_array_bytes']}",
+            f"cohort_state_bytes;per_client="
+            f"{off['resident']['server_array_bytes']};"
+            f"cohorts={on.get('cohorts')};"
+            f"residuals_per_client_mode={off['residual_entries']};"
+            f"wall_per_round={on['wall_per_round_s']}s_vs_"
+            f"{off['wall_per_round_s']}s;"
+            f"acc={on['final_acc']}_vs_{off['final_acc']};"
+            f"tracked={on['tracked_clients']}"))
+
+    # headline flatness: cohort array state across the 1000x fleet sweep
+    states = [report["modes"]["cohort"][str(n)]["resident"]
+              ["server_array_bytes"] for n in SIZES]
+    growth = max(states) / max(min(states), 1)
+    report["cohort_state_growth"] = round(growth, 3)
+    walls = [report["modes"]["cohort"][str(n)]["wall_per_round_s"]
+             for n in SIZES]
+    report["cohort_wall_growth"] = round(max(walls) / max(min(walls), 1e-9),
+                                         3)
+    rows.append(("fleet/cohort_state_growth", f"{growth:.2f}",
+                 f"x_across_{SIZES[0]}to{SIZES[-1]}_fleet;"
+                 f"wall_growth={report['cohort_wall_growth']}x"))
+
+    with open(BENCH_FLEET_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(("fleet/report", "1", f"json={BENCH_FLEET_JSON}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, value, derived in bench_fleet():
+        print(f"{name},{value},{derived}")

@@ -12,9 +12,13 @@ Prints ``name,value,derived`` CSV.  Sections:
                                     local runs and the `ingest-bench` job go
                                     through this one entrypoint so their
                                     numbers come from the same code path
+  fleet/*                         — cohort fleet-size sweep (--only fleet):
+                                    server resident state + per-round wall
+                                    clock vs 10^2..10^5 simulated clients,
+                                    gated by benchmarks/compare.py
 
 Usage: PYTHONPATH=src python -m benchmarks.run \
-           [--only figs|kernels|roofline|wire]
+           [--only figs|kernels|roofline|wire|fleet]
 """
 from __future__ import annotations
 
@@ -26,12 +30,25 @@ import traceback
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=["figs", "kernels", "roofline", "wire"],
+    ap.add_argument("--only", choices=["figs", "kernels", "roofline", "wire",
+                                       "fleet"],
                     default=None)
     args = ap.parse_args()
     print("name,value,derived")
 
     t0 = time.time()
+    if args.only == "fleet":
+        from benchmarks.fleet_bench import bench_fleet
+        try:
+            for name, value, derived in bench_fleet():
+                print(f"{name},{value},{derived}", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            print(f"bench_fleet,ERROR,{type(e).__name__}", flush=True)
+            sys.exit(1)       # the fleet gate depends on this report
+        print(f"total_benchmark_wall_seconds,{time.time() - t0:.1f},",
+              flush=True)
+        return
     if args.only == "wire":
         from benchmarks.kernel_bench import bench_dispatch, bench_ingest
         failed = False

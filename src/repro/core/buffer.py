@@ -70,6 +70,22 @@ def _write_batch(buf: jnp.ndarray, slots: jnp.ndarray, starts: jnp.ndarray,
     return jax.lax.fori_loop(0, slots.shape[0], body, buf)
 
 
+@partial(jax.jit, donate_argnums=(0,))
+def _merge_rows(buf: jnp.ndarray, dst: jnp.ndarray, src: jnp.ndarray,
+                w_dst: jnp.ndarray, w_src: jnp.ndarray):
+    """In-place (donated) sample-weighted mean of two rows into ``dst``:
+    ``buf[dst] = (w_dst*buf[dst] + w_src*buf[src]) / (w_dst + w_src)`` —
+    the edge-aggregation pre-combine, accumulated in f32 regardless of the
+    buffer's storage dtype."""
+    a = jax.lax.dynamic_index_in_dim(buf, dst, keepdims=True).astype(
+        jnp.float32)
+    b = jax.lax.dynamic_index_in_dim(buf, src, keepdims=True).astype(
+        jnp.float32)
+    merged = (w_dst * a + w_src * b) / (w_dst + w_src)
+    return jax.lax.dynamic_update_slice(
+        buf, merged.astype(buf.dtype), (dst, jnp.int32(0)))
+
+
 @dataclass
 class Update:
     """Per-slot host metadata (the params live in the device buffer)."""
@@ -184,6 +200,30 @@ class UpdateBuffer:
         if slot not in self._pending:
             raise RuntimeError(f"slot {slot} is not a reserved slot")
         self._committed.append((self._pending.pop(slot), slot))
+
+    def merge_rows(self, dst_slot: int, src_slot: int,
+                   w_dst: float, w_src: float) -> None:
+        """Sample-weighted in-place merge of row ``src_slot`` into row
+        ``dst_slot`` (one donated device dispatch; f32 accumulation).  The
+        edge-aggregation tier uses this to pre-combine a cohort's uploads
+        into one resident partial — the caller owns the metadata fold
+        (n_samples, contributor ids) and recycling of ``src_slot`` via
+        :meth:`uncommit`."""
+        self._buf = _merge_rows(self._buf, jnp.int32(dst_slot),
+                                jnp.int32(src_slot), jnp.float32(w_dst),
+                                jnp.float32(w_src))
+
+    def uncommit(self, slot: int) -> Update:
+        """Remove a *committed* slot from the visible sequence and recycle
+        its row (the inverse of :meth:`commit`): after an edge-tier merge
+        the source row's content lives on in the destination partial, so
+        the row returns to the free pool.  Returns the slot's metadata."""
+        for i, (u, r) in enumerate(self._committed):
+            if r == slot:
+                self._committed.pop(i)
+                heapq.heappush(self._free, slot)
+                return u
+        raise RuntimeError(f"slot {slot} is not a committed slot")
 
     def release(self, slot: int) -> None:
         """The upload for ``slot`` died mid-stream; recycle the row."""

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core.aggregation import SeaflHyper
 from repro.core.buffer import Update, UpdateBuffer
+from repro.runtime.cohorts import CohortDispatchSession
 from repro.runtime.dispatch import DispatchPayload, DispatchSession
 from repro.runtime.policy import DriftTracker, RatePolicy, RESYNC_MODES
 from repro.runtime.transport import (
@@ -112,6 +113,23 @@ class FLConfig:
     # writes across concurrent uploads into one donated scatter per flush
     # (0 = eager, one device dispatch per chunk — the pre-batching path)
     ingest_batch_chunks: int = 16
+    # batched-ingest auto-bypass: a cheap startup probe times one eager
+    # chunk write against a batched flush at the actual chunk size and
+    # falls back to eager pass-through where coalescing loses (large f32 /
+    # bf16 chunks — BENCH_ingest's batch_flush_speedup < 1 regime), so
+    # batched mode never regresses ingest throughput
+    ingest_auto_bypass: bool = True
+    # cohorted fleet state (runtime/cohorts.py): 'on' makes the cohort —
+    # (held version, drift band) — the unit of server-side dispatch state
+    # (one shared EF residual + one cached fold encode per cohort instead
+    # of per client) and enables the two-tier edge-aggregation pre-combine
+    # (same-version uploads merge into one (K, P) buffer slot).  'off' is
+    # the per-client mode, bit-for-bit identical to the pre-cohort stack.
+    cohorts: str = "off"
+    # coalesce one round's personalized resync re-encodes into a single
+    # batched encode pass (DispatchSession.encode_many), overlapped with
+    # the cached-hop fan-out by the simulator's encode-time model
+    resync_batching: bool = False
     seed: int = 0
 
     def hyper(self) -> SeaflHyper:
@@ -149,9 +167,15 @@ class SeaflServer:
             raise ValueError(f"dispatch_resync_mode must be one of "
                              f"{RESYNC_MODES}, got "
                              f"{cfg.dispatch_resync_mode!r}")
+        if cfg.cohorts not in ("off", "on"):
+            raise ValueError(f"cohorts must be 'off' or 'on', got "
+                             f"{cfg.cohorts!r}")
+        self._cohorts_on = cfg.cohorts == "on"
         self.dispatch: Optional[DispatchSession] = None
         if cfg.dispatch_compression is not None:
-            self.dispatch = DispatchSession(
+            sess_cls = (CohortDispatchSession if self._cohorts_on
+                        else DispatchSession)
+            self.dispatch = sess_cls(
                 make_wire_format(cfg.dispatch_compression,
                                  cfg.dispatch_chunk_elems),
                 cfg.dispatch_history,
@@ -176,8 +200,19 @@ class SeaflServer:
         self._buffer_dtype = BUFFER_DTYPES[cfg.buffer_dtype]
         self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size,
                                    dtype=self._buffer_dtype)
-        self._batcher = (IngestBatcher(self.buffer, cfg.ingest_batch_chunks)
+        self._batcher = (IngestBatcher(self.buffer, cfg.ingest_batch_chunks,
+                                       auto_bypass=cfg.ingest_auto_bypass)
                          if cfg.ingest_batch_chunks > 0 else None)
+        # two-tier edge aggregation (cohorts='on'): same-version uploads
+        # pre-combine into one resident (P,) partial per version, so the
+        # buffer holds O(live versions) slots regardless of how many
+        # clients uploaded this round.  The trigger then counts *uploads
+        # absorbed* since the last aggregation, not committed slots.
+        self._edge_slots: dict[int, tuple[int, Update]] = {}
+        self._updates_since_agg = 0
+        self._edge_merges_round = 0
+        self._edge_merges_total = 0
+        self._edge_partials_last = 0
         self.client_sizes = client_sizes
         self.active: dict[int, int] = {}         # cid -> version t_k
         self.idle: set[int] = set(client_sizes)
@@ -329,6 +364,30 @@ class SeaflServer:
         return self.dispatch.encode(cid, target, self._history,
                                     materialize=materialize, ratio=ratio)
 
+    def encode_dispatch_round(self, cids: list[int],
+                              materialize: bool = True
+                              ) -> tuple[list[DispatchPayload], int]:
+        """Encode one aggregation round's dispatch fan-out in a single
+        pass (``DispatchSession.encode_many``): cached-hop payloads fan
+        out as usual while every personalized resync fold-in coalesces
+        into one batched encode per wire format.  Returns ``(payloads,
+        fold_cost_bytes)`` with payloads aligned to ``cids`` and
+        byte-identical to sequential :meth:`encode_dispatch` calls; the
+        batch's fresh-encode source cost comes back once as
+        ``fold_cost_bytes`` (the simulator prices it overlapped with the
+        fan-out — the resync-batching path)."""
+        if self.dispatch is None:
+            return ([self.encode_dispatch(c, materialize) for c in cids], 0)
+        reqs = []
+        for cid in cids:
+            target = self.active.get(cid, self.round)
+            ratio = None
+            if self.cfg.dispatch_ratio_policy == "drift":
+                ratio = self._ratio_by_version.get(target)
+            reqs.append((cid, target, ratio))
+        return self.dispatch.encode_many(reqs, self._history,
+                                         materialize=materialize)
+
     def dispatch_ratio(self, version: Optional[int] = None) -> Optional[float]:
         """Effective top-k dispatch ratio for dispatches of ``version``
         (default: the current round): the drift band's chosen ratio when
@@ -462,12 +521,50 @@ class SeaflServer:
             # (and any co-batched neighbours) land before the commit
             self._batcher.flush()
         self.buffer.commit(sess.slot)
+        self._updates_since_agg += 1
+        if self._cohorts_on and self.buffer.capacity > 1:
+            self._edge_absorb(sess.slot)
         self.active.pop(cid, None)
         self.idle.add(cid)
-        if (len(self.buffer) >= self.buffer.capacity
+        filled = (self._updates_since_agg if self._cohorts_on
+                  else len(self.buffer))
+        if (filled >= self.buffer.capacity
                 and not self._blocked_by_stale()):
             return self._aggregate(recv_time)
         return None
+
+    def _edge_absorb(self, slot: int) -> None:
+        """Two-tier aggregation, edge tier: fold the just-committed upload
+        into its version's resident partial.
+
+        The first upload of a version this round claims its slot as the
+        version's edge partial; every later same-version upload merges into
+        it as a sample-weighted mean (one donated device op) and its own
+        row is uncommitted back to the free pool.  The partial's metadata
+        accumulates the contributor ids (``meta['merged_cids']``) and total
+        sample count, so the top-tier Eq. (4)-(8) weights see one slot per
+        version carrying the cohort's combined mass — the buffer stays
+        O(live versions) while the aggregation trigger still counts raw
+        uploads.  Within a partial, members are n_k-weighted (plain
+        sample-weighted averaging); the staleness/importance weighting
+        applies at the cohort granularity — the hierarchical trade."""
+        hu, _ = self.buffer._committed[-1]
+        v = hu.version
+        held = self._edge_slots.get(v)
+        if held is None:
+            self._edge_slots[v] = (slot, hu)
+            return
+        hslot, head = held
+        self.buffer.merge_rows(hslot, slot, float(head.n_samples),
+                               float(hu.n_samples))
+        head.meta.setdefault("merged_cids",
+                             [head.client_id]).append(hu.client_id)
+        head.n_samples += hu.n_samples
+        head.recv_time = hu.recv_time
+        head.n_epochs = max(head.n_epochs, hu.n_epochs)
+        self.buffer.uncommit(slot)
+        self._edge_merges_round += 1
+        self._edge_merges_total += 1
 
     def ingest_payload(self, payload: UploadPayload,
                        recv_time: float = 0.0) -> Optional[AggregationEvent]:
@@ -544,8 +641,16 @@ class SeaflServer:
                 use_staleness=h.use_staleness)
             weights = np.asarray(w)
 
-        contributors = self.buffer.client_ids()
+        # an edge partial contributes every client it absorbed; plain slots
+        # carry their own id (identical to buffer.client_ids() when no
+        # merge happened — the cohorts='off' expression, bit-for-bit)
+        contributors = [c for u in updates
+                        for c in u.meta.get("merged_cids", [u.client_id])]
         self.buffer.drain()
+        self._edge_partials_last = self._edge_merges_round
+        self._edge_merges_round = 0
+        self._edge_slots = {}
+        self._updates_since_agg = 0
         self.round += 1
         self.total_aggregations += 1
         self._history[self.round] = self._flat
@@ -574,6 +679,60 @@ class SeaflServer:
             contributors=contributors, dispatch=dispatch,
             notify=self.clients_to_notify())
 
+    # ------------------------------------------------------- fleet telemetry
+    def cohort_stats(self) -> Optional[dict]:
+        """Cohort-layer occupancy for the simulator's per-round history and
+        the train CLI (None when ``cohorts='off'``): ``cohorts`` is the
+        live cohort count in the dispatch table (0 without a dispatch
+        session), ``edge_partials`` the number of edge-tier pre-combine
+        merges absorbed by the round that just aggregated."""
+        if not self._cohorts_on:
+            return None
+        return {
+            "cohorts": (self.dispatch.table.n_cohorts()
+                        if isinstance(self.dispatch, CohortDispatchSession)
+                        else 0),
+            "edge_partials": int(self._edge_partials_last),
+            "edge_merges_total": int(self._edge_merges_total),
+        }
+
+    def resident_state_bytes(self) -> dict:
+        """Server-resident fleet-state breakdown (the BENCH_fleet metric).
+
+        ``server_array_bytes`` sums the *server-resident* (P,)-scaled
+        device state — history ring, (K, P) buffer, dispatch residuals —
+        which is what must stay ~O(cohorts + ring) as fleet size grows;
+        ``tracking_entries`` counts the O(clients) *scalar* entries (held
+        versions) that legitimately remain per-client.  ``client_ef_bytes``
+        is reported separately: uplink error-feedback residuals live on the
+        devices in a real deployment and are only simulated centrally."""
+        hist = sum(int(v.size) * 4 for v in self._history.values())
+        buf = int(self.buffer.hbm_bytes)
+        ef = sum(int(e.residual.size) * 4 for e in self._ef.values()
+                 if e.residual is not None)
+        disp = cache = tracking = 0
+        if self.dispatch is not None:
+            tracking = len(self.dispatch.versions)
+            if isinstance(self.dispatch, CohortDispatchSession):
+                disp = self.dispatch.table.resident_bytes()
+            else:
+                disp = sum(int(r.size) * 4
+                           for r in self.dispatch.residuals.values())
+            for ent in self.dispatch._cache.values():
+                cache += int(ent[2])
+                if ent[1] is not None:
+                    cache += int(ent[1].size) * 4
+        return {
+            "history_bytes": hist,
+            "buffer_bytes": buf,
+            "dispatch_residual_bytes": disp,
+            "client_ef_bytes": ef,
+            "encode_cache_bytes": cache,
+            "tracking_entries": tracking,
+            "edge_partial_slots": len(self._edge_slots),
+            "server_array_bytes": hist + buf + disp,
+        }
+
     # ------------------------------------------------------ fault tolerance
     def state_dict(self) -> dict:
         """JSON-able control state (arrays are saved separately via the
@@ -600,14 +759,31 @@ class SeaflServer:
                                  self._ratio_by_version.items()},
             "rng": self._rng.bit_generator.state,
             "history_versions": sorted(self._history),
+            # a slot's meta rides along only when non-empty (edge partials
+            # carry merged_cids); off-mode entries are unchanged, so PR-5
+            # era checkpoints stay interchangeable with cohorts='off'
             "buffer": [
-                {"client_id": u.client_id, "n_samples": u.n_samples,
-                 "version": u.version, "n_epochs": u.n_epochs,
-                 "recv_time": u.recv_time}
+                dict({"client_id": u.client_id, "n_samples": u.n_samples,
+                      "version": u.version, "n_epochs": u.n_epochs,
+                      "recv_time": u.recv_time},
+                     **({"meta": u.meta} if u.meta else {}))
                 for u in self.buffer.updates()
             ],
             "ef_clients": sorted(c for c, ef in self._ef.items()
                                  if ef.residual is not None),
+            **({
+                # cohort mode: the upload counter decouples the trigger
+                # from committed-slot count, and edge partials must re-link
+                # to their rebuilt rows (slots are re-rowed 0..k-1 by the
+                # add() rebuild, so the committed *index* is the stable id)
+                "updates_since_agg": int(self._updates_since_agg),
+                "edge_slots": [
+                    [int(v), next(i for i, (u, _) in
+                                  enumerate(self.buffer._committed)
+                                  if u is hu)]
+                    for v, (_, hu) in self._edge_slots.items()
+                ],
+            } if self._cohorts_on else {}),
         }
 
     def checkpoint_trees(self) -> dict:
@@ -635,7 +811,8 @@ class SeaflServer:
         self.bytes_uploaded = int(state.get("bytes_uploaded", 0))
         self.bytes_downloaded = int(state.get("bytes_downloaded", 0))
         disp_state = state.get("dispatch")
-        disp_trees = {k: v for k, v in trees.items() if k.startswith("dr")}
+        disp_trees = {k: v for k, v in trees.items()
+                      if k.startswith(("dr", "cr"))}
         if disp_state is not None and self.dispatch is None:
             warnings.warn(
                 "checkpoint carries dispatch version-tracking state but the "
@@ -649,6 +826,19 @@ class SeaflServer:
                     f"'{disp_state.get('scheme')}' but the restored config "
                     f"uses '{self.dispatch.fmt.scheme}'; dropping tracking "
                     f"state (clients re-request full snapshots)")
+                disp_state, disp_trees = None, {}
+            if disp_state is not None and \
+                    ("cohort" in disp_state) != isinstance(
+                        self.dispatch, CohortDispatchSession):
+                # per-client residual state cannot seed cohort tables (or
+                # vice versa) — crossing modes drops tracking, so every
+                # client re-requests one exact full snapshot
+                warnings.warn(
+                    "checkpoint dispatch state was written under the "
+                    f"{'cohort' if 'cohort' in disp_state else 'per-client'}"
+                    " fleet-state mode but the restored config uses "
+                    f"cohorts='{self.cfg.cohorts}'; dropping tracking state "
+                    "(clients re-request full snapshots)")
                 disp_state, disp_trees = None, {}
             self.dispatch.load_state(disp_state or {}, disp_trees)
         self._drift = DriftTracker.from_state(state.get("drift"),
@@ -683,7 +873,8 @@ class SeaflServer:
         self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size,
                                    dtype=self._buffer_dtype)
         self._batcher = (IngestBatcher(self.buffer,
-                                       self.cfg.ingest_batch_chunks)
+                                       self.cfg.ingest_batch_chunks,
+                                       auto_bypass=self.cfg.ingest_auto_bypass)
                          if self.cfg.ingest_batch_chunks > 0 else None)
         for i, m in enumerate(state.get("buffer", [])):
             self.buffer.add(
@@ -691,5 +882,17 @@ class SeaflServer:
                        n_samples=int(m["n_samples"]),
                        version=int(m["version"]),
                        n_epochs=int(m["n_epochs"]),
-                       recv_time=float(m["recv_time"])),
+                       recv_time=float(m["recv_time"]),
+                       meta=dict(m.get("meta", {}))),
                 jnp.asarray(trees[f"slot{i}"]))
+        # edge-tier state: absent in pre-cohort / off-mode checkpoints, so
+        # the counter defaults to the committed-slot count (off-mode
+        # equivalence) and the partial map stays empty
+        self._updates_since_agg = int(state.get(
+            "updates_since_agg", len(state.get("buffer", []))))
+        self._edge_slots = {}
+        for v, i in state.get("edge_slots", []):
+            u, row = self.buffer._committed[int(i)]
+            self._edge_slots[int(v)] = (row, u)
+        self._edge_merges_round = 0
+        self._edge_partials_last = 0

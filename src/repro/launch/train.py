@@ -45,7 +45,8 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                 dispatch_ratio_policy: str = "static",
                 uplink_ratio_policy: str = "static",
                 drift_band_edges=(0.8, 1.6),
-                drift_band_ratios=(0.025, 0.05, 0.1)):
+                drift_band_ratios=(0.025, 0.05, 0.1),
+                cohorts: str = "off", resync_batching: bool = False):
     cfg = smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg)
     params0 = model.init(jax.random.PRNGKey(seed))
@@ -93,7 +94,8 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                   uplink_ratio_policy=uplink_ratio_policy,
                   drift_band_edges=tuple(drift_band_edges),
                   drift_band_ratios=tuple(drift_band_ratios),
-                  ingest_batch_chunks=ingest_batch)
+                  ingest_batch_chunks=ingest_batch,
+                  cohorts=cohorts, resync_batching=resync_batching)
     server = SeaflServer(fl, params0, {c.cid: c.n_samples
                                        for c in clients.values()})
 
@@ -157,6 +159,15 @@ def main():
     ap.add_argument("--ingest-batch", type=int, default=16,
                     help="streaming-ingest chunk writes coalesced per "
                          "donated scatter (0 = eager per-chunk writes)")
+    ap.add_argument("--cohorts", default="off", choices=["off", "on"],
+                    help="cohorted fleet state: one shared dispatch "
+                         "residual per (held version, drift band) cohort "
+                         "plus two-tier edge pre-aggregation (off = "
+                         "per-client state, the pre-cohort behaviour)")
+    ap.add_argument("--resync-batching", action="store_true", default=False,
+                    help="coalesce each round's personalized resync "
+                         "re-encodes into one batched encode pass "
+                         "overlapped with the cached-hop fan-out")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
@@ -179,7 +190,8 @@ def main():
             float(x) for x in args.drift_band_edges.split(",") if x),
         drift_band_ratios=tuple(
             float(x) for x in args.drift_band_ratios.split(",") if x),
-        ingest_batch=args.ingest_batch)
+        ingest_batch=args.ingest_batch,
+        cohorts=args.cohorts, resync_batching=args.resync_batching)
 
     ck = None
     if args.ckpt_dir:
@@ -200,9 +212,14 @@ def main():
         sim.run(max_rounds=min(server.round + args.ckpt_every, args.rounds))
         if sim.history:
             h = sim.history[-1]
+            cohort_note = ""
+            if "cohorts" in h:
+                cohort_note = (f"cohorts={h['cohorts']} "
+                               f"edge_partials={h['edge_partials']} ")
             print(f"[round {h['round']:3d}] sim_time={h['time']:8.1f}s "
                   f"heldout_ce={-h.get('acc', float('nan')):.4f} "
                   f"stale_max={h['staleness_max']:.0f} "
+                  f"{cohort_note}"
                   f"wall={time.time() - t0:.0f}s", flush=True)
         if ck is not None and server.round > last_ck:
             ck.save(server.round, server.checkpoint_trees(),
@@ -224,6 +241,10 @@ def main():
             counts[r["ratio"]] = counts.get(r["ratio"], 0) + 1
         bands = ", ".join(f"{k}: {v}" for k, v in sorted(counts.items()))
         disp_note += f", dispatch_ratio_bands={{{bands}}}"
+    cs = server.cohort_stats()
+    if cs is not None:
+        disp_note += (f", cohorts={cs['cohorts']}"
+                      f", edge_merges={cs['edge_merges_total']}")
     print(f"[train] done: {server.round} rounds, "
           f"{server.total_aggregations} aggregations, "
           f"uplink_bytes={server.bytes_uploaded}, "

@@ -56,6 +56,7 @@ __all__ = [
     "decode_chunk",
     "decode_concat",
     "encode_flat",
+    "encode_flat_batch",
     "encode_error",
     "FlatErrorFeedback",
 ]
@@ -101,6 +102,31 @@ def _enc_int8(x):
     return {"q": q, "scale": scale}
 
 
+@partial(jax.jit, static_argnames=("k",))
+def _enc_topk_batch(x, k):
+    """Row-wise _enc_topk over a (B, n) stack — one fused pass for a whole
+    batch of same-window encodes (resync batching).  vmap of the exact
+    per-row computation, so each row's idx/val are bit-identical to
+    ``_enc_topk`` on that row alone."""
+
+    def one(row):
+        rf = row.astype(jnp.float32)
+        _, idx = jax.lax.top_k(jnp.abs(rf), k)
+        return {"idx": idx.astype(jnp.int32), "val": rf[idx]}
+
+    return jax.vmap(one)(x)
+
+
+@jax.jit
+def _enc_int8_batch(x):
+    """Row-wise _enc_int8 over a (B, n) stack: per-row max/abs scale, so
+    each row quantises bit-identically to the unbatched kernel."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[:, None]), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
 @partial(jax.jit, static_argnames=("n",))
 def _dec_topk(idx, val, n):
     return jnp.zeros((n,), jnp.float32).at[idx].set(val)
@@ -136,6 +162,21 @@ class ChunkCodec:
                fmt: "WireFormat") -> jnp.ndarray:
         raise NotImplementedError
 
+    def encode_batch(self, x: jnp.ndarray, fmt: "WireFormat") -> Any:
+        """Encode a (B, n) stack of same-window slices in one pass.
+
+        Row ``i`` of the result (via :meth:`split_batch`) must be
+        *bit-identical* to ``encode(x[i], fmt)`` — batching is a pure
+        dispatch-count amortisation, never a semantic change.  The default
+        falls back to row-by-row encode, so a new codec is correct before
+        it is fast."""
+        return [self.encode(x[i], fmt) for i in range(int(x.shape[0]))]
+
+    def split_batch(self, payload: Any, i: int) -> Any:
+        """Row ``i`` of an :meth:`encode_batch` result, in the same layout
+        :meth:`decode` expects for a single chunk."""
+        return payload[i]
+
 
 CODECS: dict[str, ChunkCodec] = {}
 
@@ -157,6 +198,12 @@ class _F32Codec(ChunkCodec):
     def decode(self, payload, length, fmt):
         return payload
 
+    def encode_batch(self, x, fmt):
+        return x                                  # rows pass through
+
+    def split_batch(self, payload, i):
+        return payload[i]
+
 
 class _Bf16Codec(ChunkCodec):
     name = "bf16"
@@ -169,6 +216,12 @@ class _Bf16Codec(ChunkCodec):
 
     def decode(self, payload, length, fmt):
         return payload.astype(jnp.float32)
+
+    def encode_batch(self, x, fmt):
+        return _enc_bf16(x)                       # elementwise: rank-free
+
+    def split_batch(self, payload, i):
+        return payload[i]
 
 
 class _TopkCodec(ChunkCodec):
@@ -189,6 +242,12 @@ class _TopkCodec(ChunkCodec):
     def decode(self, payload, length, fmt):
         return _dec_topk(payload["idx"], payload["val"], length)
 
+    def encode_batch(self, x, fmt):
+        return _enc_topk_batch(x, self.kept(int(x.shape[1]), fmt))
+
+    def split_batch(self, payload, i):
+        return {"idx": payload["idx"][i], "val": payload["val"][i]}
+
 
 class _Int8Codec(ChunkCodec):
     name = "int8"
@@ -202,6 +261,12 @@ class _Int8Codec(ChunkCodec):
 
     def decode(self, payload, length, fmt):
         return _dec_int8(payload["q"], payload["scale"])
+
+    def encode_batch(self, x, fmt):
+        return _enc_int8_batch(x)
+
+    def split_batch(self, payload, i):
+        return {"q": payload["q"][i], "scale": payload["scale"][i]}
 
 
 _register(_F32Codec())
@@ -343,6 +408,42 @@ def encode_flat(vec: jnp.ndarray, fmt: WireFormat) -> list[Chunk]:
         chunks.append(Chunk(0, 0, 0, jnp.zeros((0,), jnp.float32),
                             CHUNK_HEADER_BYTES))
     return chunks
+
+
+def encode_flat_batch(vecs, fmt: WireFormat) -> list[list[Chunk]]:
+    """Encode a stack of same-length flat vectors in one fused pass per
+    chunk window.
+
+    ``vecs`` is a (B, P) array or a list of B (P,) arrays.  Returns one
+    chunk list per row, each *bit-identical* to ``encode_flat(vecs[i],
+    fmt)`` (same windows, same per-row kernel math — see the per-codec
+    ``encode_batch`` contract): batching collapses O(B x chunks) device
+    dispatches into O(chunks), which is what makes coalescing one round's
+    personalized resync re-encodes (runtime/dispatch.py ``encode_many``)
+    a pure amortisation.
+    """
+    arr = vecs if hasattr(vecs, "ndim") and vecs.ndim == 2 \
+        else jnp.stack(list(vecs))
+    b, p = int(arr.shape[0]), int(arr.shape[1])
+    codec = fmt.codec
+    out: list[list[Chunk]] = [[] for _ in range(b)]
+    off, seq = 0, 0
+    while off < p:
+        n = min(fmt.chunk_elems, p - off)
+        window = jax.lax.slice(arr, (0, off), (b, off + n))
+        payload = codec.encode_batch(window, fmt)
+        nbytes = fmt.chunk_wire_bytes(n)
+        for i in range(b):
+            out[i].append(Chunk(seq=seq, start=off, length=n,
+                                payload=codec.split_batch(payload, i),
+                                nbytes=nbytes))
+        off += n
+        seq += 1
+    if p == 0:                 # zero-parameter model: one empty sentinel
+        for i in range(b):
+            out[i].append(Chunk(0, 0, 0, jnp.zeros((0,), jnp.float32),
+                                CHUNK_HEADER_BYTES))
+    return out
 
 
 def encode_error(vec: jnp.ndarray, chunks: list[Chunk],

@@ -1,0 +1,447 @@
+"""Cohorted fleet state: O(cohorts) server memory for O(clients) fleets.
+
+The per-client dispatch layer (runtime/dispatch.py) keeps one full (P,)
+error-feedback residual and one dict entry per client — fine at 10²
+clients, impossible at the 10⁶-device fleets the ROADMAP targets.  But the
+multicast engine already proved the load-bearing observation: SEAFL's
+semi-asynchronous rounds make most clients move through the *same* hops,
+so their dispatch state is highly redundant.  CSAFL (PAPERS.md) shows the
+protocol-level version of the same idea — grouping semi-async clients into
+clusters that share aggregation state preserves convergence while bounding
+server cost.
+
+This module makes the *cohort* the unit of server-side fleet state:
+
+  cohort key = (held version, drift band, kind)
+
+where the drift band is the top-k ratio the delivering dispatch actually
+shipped at (the rate policy chooses one discrete ratio per target version,
+so the band is exactly what the multicast encode cache already keys on),
+and ``kind`` separates residual-free holders (``'x'``: full snapshots, raw
+schemes) from residual-carrying delta holders (``'d'``) so an exact holder
+never inherits a delta cohort's error memory.
+
+:class:`CohortTable` stores **one** shared (P,) EF residual per cohort
+(write-once: the first member to arrive on a hop defines it — every
+co-moving member received byte-identical payloads, so their implied
+residuals agree exactly as long as they keep moving together).  A member
+that joins a cohort whose stored residual differs from its own implied one
+accrues a scalar *mismatch bound* ``|implied - stored|`` instead of a (P,)
+array; because payloads carry their encode identity (``hop``), that norm
+is memoized per (hop, src, dst) and computed once per edge, not per
+member.  When a member's accumulated mismatch outgrows the hop delta (the
+same ``dispatch_resync`` economics as the EF resync), the escape hatch is
+the existing bounded one: drop tracking, ship one exact full snapshot,
+re-enter a fresh cohort with zero mismatch.
+
+:class:`CohortDispatchSession` plugs the table into the dispatch protocol
+through the narrow tracking hooks (``held_version`` / ``_residual_of`` /
+``_commit_tracking``) — the wire protocol, ring, multicast cache and
+resync triggers above those hooks are untouched, which is what keeps
+``cohorts='off'`` bit-for-bit.  It also caches personalized fold-in
+encodes per cohort (a fold vec is ``hop delta + cohort residual`` — shared
+by every member, unlike the per-client session where folds can never
+repeat), and shards cohort residuals over the pod mesh axis like the
+update buffer (``sharding.shard_cohort_state``).
+
+The companion *uplink* half of the tentpole — the edge-aggregation tier
+that pre-combines a cohort's uploads into one (K, P) buffer slot — lives
+in ``core/server.py`` (``_edge_absorb``), which owns the buffer.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.runtime.codecs import Chunk, WireFormat
+from repro.runtime.dispatch import DispatchPayload, DispatchSession
+from repro.runtime.policy import needs_resync
+from repro.sharding import shard_cohort_state
+
+__all__ = [
+    "CohortTable",
+    "CohortDispatchSession",
+]
+
+# cohort-key kinds: exact holders (no residual) vs delta holders
+KIND_EXACT = "x"
+KIND_DELTA = "d"
+
+
+class CohortTable:
+    """Fleet membership + shared per-cohort dispatch residuals.
+
+    State:
+      ``member``    cid -> cohort key (version, band, kind) — O(clients)
+                    scalars (ints/floats), never (P,) arrays;
+      ``mismatch``  cid -> scalar bound on |true residual - cohort
+                    residual| (only clients that ever diverged appear);
+      ``_residual`` cohort key -> one shared (P,) EF residual (delta
+                    cohorts only; write-once per cohort generation) —
+                    the O(cohorts) array state;
+      ``_gen``      cohort key -> generation counter: bumped every time a
+                    cohort (re)defines its residual, so memoized mismatch
+                    norms and cached fold encodes can never alias a dead
+                    cohort's residual with a later one under the same key.
+    """
+
+    def __init__(self):
+        self.member: dict[int, tuple] = {}
+        self.mismatch: dict[int, float] = {}
+        self._residual: dict[tuple, jnp.ndarray] = {}
+        self._count: dict[tuple, int] = {}
+        self._gen: dict[tuple, int] = {}
+        # (hop, src, src_gen, dst, dst_gen) -> |implied - stored|
+        self._memo: dict[tuple, float] = {}
+        self.cohort_births = 0
+        self.residual_writes = 0
+        self.memo_hits = 0
+        self.memo_misses = 0
+
+    # ------------------------------------------------------------- queries
+    def key_of(self, cid: int) -> Optional[tuple]:
+        return self.member.get(cid)
+
+    def gen_of(self, key: Optional[tuple]) -> int:
+        return self._gen.get(key, 0)
+
+    def residual_vec(self, key: Optional[tuple]) -> Optional[jnp.ndarray]:
+        return self._residual.get(key) if key is not None else None
+
+    def mismatch_of(self, cid: int) -> float:
+        return self.mismatch.get(cid, 0.0)
+
+    def n_cohorts(self) -> int:
+        return len(self._count)
+
+    def n_members(self) -> int:
+        return len(self.member)
+
+    def resident_bytes(self) -> int:
+        """Device bytes of the shared (P,) residual arrays — the state the
+        fleet bench gates on staying O(cohorts), not O(clients)."""
+        return sum(int(v.size) * 4 for v in self._residual.values())
+
+    # ------------------------------------------------------------ movement
+    def move(self, cid: int, dst: tuple,
+             implied: Optional[Callable[[], Optional[jnp.ndarray]]] = None,
+             hop: Optional[tuple] = None, reset: bool = False) -> None:
+        """Deliver-time transition of ``cid`` into cohort ``dst``.
+
+        ``implied`` lazily materialises the (P,) residual this delivery
+        implies for the client (None for exact deliveries) — it is only
+        called when the destination cohort is born (one write) or when a
+        join penalty must actually be computed (memo miss).  ``reset``
+        clears the client's mismatch first (full snapshots reset error
+        memory exactly).
+        """
+        src = self.member.get(cid)
+        if reset:
+            self.mismatch.pop(cid, None)
+        if self._count.get(dst, 0) == 0:
+            # cohort birth: the first member's implied residual defines the
+            # shared one (write-once for this generation)
+            vec = implied() if implied is not None else None
+            if vec is not None:
+                self._residual[dst] = shard_cohort_state(vec)
+                self._gen[dst] = self._gen.get(dst, 0) + 1
+                self.residual_writes += 1
+            self.cohort_births += 1
+        elif implied is not None:
+            # joining a live cohort: the member inherits the stored
+            # residual; the gap to its own implied one becomes a scalar
+            # mismatch bound (norm memoized per encode instance)
+            pen = self._join_penalty(hop, src, dst, implied)
+            if pen > 0.0:
+                self.mismatch[cid] = self.mismatch.get(cid, 0.0) + pen
+        if src != dst:
+            self._count[dst] = self._count.get(dst, 0) + 1
+            self.member[cid] = dst
+            if src is not None:
+                self._leave(src)
+
+    def _join_penalty(self, hop: Optional[tuple], src: Optional[tuple],
+                      dst: tuple,
+                      implied: Callable[[], Optional[jnp.ndarray]]) -> float:
+        mk = (hop, src, self.gen_of(src), dst, self.gen_of(dst))
+        pen = self._memo.get(mk) if hop is not None else None
+        if pen is not None:
+            self.memo_hits += 1
+            return pen
+        stored = self._residual.get(dst)
+        vec = implied()
+        if vec is None and stored is None:
+            pen = 0.0
+        elif vec is None:
+            pen = float(jnp.linalg.norm(stored))
+        elif stored is None:
+            pen = float(jnp.linalg.norm(vec))
+        else:
+            pen = float(jnp.linalg.norm(vec - stored))
+        if hop is not None:
+            self._memo[mk] = pen
+            self.memo_misses += 1
+        return pen
+
+    def _leave(self, key: tuple) -> None:
+        n = self._count.get(key, 1) - 1
+        if n <= 0:
+            # last member out: the shared residual dies with the cohort
+            # (the generation counter survives, guarding stale memo/cache
+            # entries against a later rebirth under the same key)
+            self._count.pop(key, None)
+            self._residual.pop(key, None)
+        else:
+            self._count[key] = n
+
+    def remove(self, cid: int) -> None:
+        """Forget a client entirely (crash / tracking drop)."""
+        key = self.member.pop(cid, None)
+        self.mismatch.pop(cid, None)
+        if key is not None:
+            self._leave(key)
+
+    def prune(self, live: set[int]) -> None:
+        """Ring aging: drop memo/gen entries whose versions left the
+        retained window — those cohort keys can never recur (versions are
+        monotone), so the generation guard for them is moot."""
+        if self._memo:
+            self._memo = {
+                k: v for k, v in self._memo.items()
+                if (k[1] is None or k[1][0] in live) and k[3][0] in live
+            }
+        if self._gen:
+            self._gen = {k: g for k, g in self._gen.items()
+                         if k[0] in live or k in self._count}
+
+    # ----------------------------------------------------------- telemetry
+    def stats(self) -> dict:
+        return {
+            "cohorts": self.n_cohorts(),
+            "members": self.n_members(),
+            "residual_cohorts": len(self._residual),
+            "resident_bytes": self.resident_bytes(),
+            "cohort_births": int(self.cohort_births),
+            "residual_writes": int(self.residual_writes),
+            "mismatched_members": len(self.mismatch),
+        }
+
+    # ----------------------------------------------------------- checkpoint
+    def state_dict(self) -> dict:
+        # cohort keys are (int version, float-or-None band, str kind):
+        # JSON round-trips each component exactly.  res_keys aligns with
+        # the cr{i} arrays from residual_trees (same dict iteration).
+        return {
+            "member": {str(c): list(k) for c, k in self.member.items()},
+            "mismatch": {str(c): float(m)
+                         for c, m in self.mismatch.items()},
+            "counts": [[list(k), int(n)] for k, n in self._count.items()],
+            "gen": [[list(k), int(g)] for k, g in self._gen.items()],
+            "res_keys": [list(k) for k in self._residual],
+        }
+
+    def residual_trees(self) -> dict:
+        return {f"cr{i}": v for i, v in enumerate(self._residual.values())}
+
+    def load_state(self, state: dict, trees: dict) -> None:
+        def kt(lst) -> tuple:
+            return (int(lst[0]),
+                    None if lst[1] is None else float(lst[1]),
+                    str(lst[2]))
+
+        self.member = {int(c): kt(k)
+                       for c, k in state.get("member", {}).items()}
+        self.mismatch = {int(c): float(m)
+                         for c, m in state.get("mismatch", {}).items()}
+        self._count = {kt(k): int(n) for k, n in state.get("counts", [])}
+        self._gen = {kt(k): int(g) for k, g in state.get("gen", [])}
+        self._residual = {}
+        for i, k in enumerate(state.get("res_keys", [])):
+            self._residual[kt(k)] = shard_cohort_state(
+                jnp.asarray(trees[f"cr{i}"], jnp.float32))
+        self._memo = {}
+
+
+class CohortDispatchSession(DispatchSession):
+    """Dispatch session whose per-client (P,) state is cohort-shared.
+
+    Overrides exactly the tracking hooks (plus the fold-encode cache):
+    the encode protocol, multicast cache, ring aging and resync economics
+    are the base class's, byte-for-byte.  ``versions`` stays a real
+    per-client dict (one int per client — version tracking is inherently
+    per-client); what collapses to O(cohorts) is the (P,) residual state
+    and the fold encodes.
+    """
+
+    def __init__(self, fmt: WireFormat, history: int,
+                 table: Optional[CohortTable] = None, **kw):
+        super().__init__(fmt, history, **kw)
+        self.table = table if table is not None else CohortTable()
+        # (src key, src gen, target, scheme, ratio, chunk_elems) ->
+        #     (chunks, err, nbytes): one fold encode serves every cohort
+        # member on the hop (their fold vec is identical by construction)
+        self._fold_cache: dict[tuple, tuple] = {}
+        self.fold_hits = 0
+        self.fold_misses = 0
+        self.mismatch_resyncs = 0
+
+    # ------------------------------------------------------ tracking hooks
+    def _residual_of(self, cid: int) -> Optional[jnp.ndarray]:
+        return self.table.residual_vec(self.table.key_of(cid))
+
+    def _commit_tracking(self, payload: DispatchPayload) -> None:
+        cid = payload.cid
+        src = self.table.key_of(cid)
+        self.versions[cid] = payload.target_version
+        if payload.full or payload.residual is None:
+            # exact delivery: residual-free cohort, mismatch resets (a
+            # full snapshot is the cohort layer's escape hatch)
+            self.table.move(
+                cid, (payload.target_version, payload.ratio, KIND_EXACT),
+                implied=None, hop=payload.hop, reset=True)
+            return
+        dst = (payload.target_version, payload.ratio, KIND_DELTA)
+        if payload.shared:
+            # multicast hop: implied residual = own residual + shared err;
+            # members arriving from the same src cohort imply the same
+            # vector, so the lazy closure runs once per (hop, src, dst)
+            def implied():
+                r = self.table.residual_vec(src)
+                return payload.residual if r is None \
+                    else r + payload.residual
+        else:
+            # personalized fold: the payload's err *replaces* the residual
+            def implied():
+                return payload.residual
+        self.table.move(cid, dst, implied=implied, hop=payload.hop)
+
+    def drop(self, cid: int) -> None:
+        super().drop(cid)
+        self.table.remove(cid)
+
+    # ------------------------------------------------------------- encode
+    def encode(self, cid: int, target: int, ring, materialize: bool = True,
+               ratio: Optional[float] = None,
+               _folds: Optional[list] = None) -> Optional[DispatchPayload]:
+        """Adds the cohort escape hatch in front of the base protocol: a
+        member whose accumulated *mismatch bound* (scalar |true residual -
+        cohort residual|) outgrows the hop delta cannot be served by any
+        shared state — its tracking is dropped pre-encode, so the base
+        class ships one exact full snapshot and delivery re-enters a fresh
+        cohort with zero mismatch.  Same ``dispatch_resync`` economics as
+        the EF resync trigger."""
+        held = self.held_version(cid)
+        if (held is not None and self.fmt.delta_coded and held in ring
+                and held in self.ring_versions(target)):
+            m = self.table.mismatch_of(cid)
+            if m > 0.0:
+                if self.resync <= 0.0:
+                    force = True
+                else:
+                    fmt = self._fmt_for(ratio)
+                    ent = self._cache.get(
+                        self._cache_key(held, target, fmt))
+                    dnorm = (ent[3] if ent is not None
+                             and ent[3] is not None
+                             else float(jnp.linalg.norm(
+                                 ring[target] - ring[held])))
+                    force = needs_resync(
+                        "norm", r_norm=m, hop_norm=dnorm,
+                        threshold=self.resync, fmt=fmt,
+                        param_size=int(ring[target].shape[0]))
+                if force:
+                    self.versions.pop(cid, None)
+                    self.table.remove(cid)
+                    self.mismatch_resyncs += 1
+        return super().encode(cid, target, ring, materialize=materialize,
+                              ratio=ratio, _folds=_folds)
+
+    # ----------------------------------------------------- personalized fold
+    def _fold_key(self, cid: int, held: int, target: int,
+                  fmt: WireFormat) -> tuple:
+        src = self.table.key_of(cid)
+        if src is None:
+            return super()._fold_key(cid, held, target, fmt)
+        return (src, self.table.gen_of(src), target, fmt.scheme,
+                fmt.topk_ratio, fmt.chunk_elems)
+
+    def _encode_personalized(self, cid, target, held, fmt, g, ring, delta,
+                             r, wire_ratio, folds=None):
+        src = self.table.key_of(cid)
+        if self.use_cache and src is not None:
+            fk = self._fold_key(cid, held, target, fmt)
+            ent = self._fold_cache.get(fk)
+            if ent is not None:
+                # cohort fold hit: every member's fold vec is the same
+                # hop delta + shared residual, so the encode fans out
+                chunks, err, nbytes = ent
+                self.fold_hits += 1
+                return DispatchPayload(
+                    cid=cid, target_version=target, base_version=held,
+                    scheme=fmt.scheme, param_size=int(g.shape[0]),
+                    chunks=chunks, nbytes=nbytes, residual=err,
+                    shared=False,
+                    resync=(self.multicast and r is not None),
+                    ratio=wire_ratio, encode_cost_bytes=0,
+                    hop=("fold",) + fk)
+            self.fold_misses += 1
+        return super()._encode_personalized(cid, target, held, fmt, g,
+                                            ring, delta, r, wire_ratio,
+                                            folds)
+
+    def _fold_encoded(self, fold_key: tuple, chunks: list[Chunk],
+                      err: Optional[jnp.ndarray], nbytes: int) -> None:
+        # cache only cohort-keyed folds (leading element is the src cohort
+        # key); per-cid fallback folds can never repeat byte-identically
+        if self.use_cache and isinstance(fold_key[0], tuple):
+            self._fold_cache[fold_key] = (chunks, err, nbytes)
+
+    # -------------------------------------------------------------- caches
+    def age_cache(self, current: int) -> None:
+        super().age_cache(current)
+        if self._fold_cache:
+            live = self.ring_versions(current)
+            self._fold_cache = {
+                k: v for k, v in self._fold_cache.items()
+                if k[0][0] in live and k[2] in live
+            }
+        self.table.prune(self.ring_versions(current))
+
+    def invalidate_cache(self) -> None:
+        super().invalidate_cache()
+        self._fold_cache = {}
+
+    # ----------------------------------------------------------- telemetry
+    def cache_info(self) -> dict:
+        info = super().cache_info()
+        info.update({
+            "fold_hits": int(self.fold_hits),
+            "fold_misses": int(self.fold_misses),
+            "fold_entries": len(self._fold_cache),
+            "mismatch_resyncs": int(self.mismatch_resyncs),
+            "cohorts": self.table.n_cohorts(),
+        })
+        return info
+
+    # ----------------------------------------------------------- checkpoint
+    def state_dict(self) -> dict:
+        s = super().state_dict()
+        s["cohort"] = self.table.state_dict()
+        s["fold_hits"] = int(self.fold_hits)
+        s["fold_misses"] = int(self.fold_misses)
+        s["mismatch_resyncs"] = int(self.mismatch_resyncs)
+        return s
+
+    def residual_trees(self) -> dict:
+        # per-client residuals are unused here; persist the cohort arrays
+        return self.table.residual_trees()
+
+    def load_state(self, state: dict, trees: dict) -> None:
+        super().load_state(state, trees)   # versions, counters; dr* absent
+        self.table = CohortTable()
+        self.table.load_state(state.get("cohort", {}), trees)
+        self.fold_hits = int(state.get("fold_hits", 0))
+        self.fold_misses = int(state.get("fold_misses", 0))
+        self.mismatch_resyncs = int(state.get("mismatch_resyncs", 0))
+        self._fold_cache = {}

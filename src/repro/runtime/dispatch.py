@@ -83,7 +83,7 @@ import jax.numpy as jnp
 
 from repro.runtime.codecs import (
     CHUNK_HEADER_BYTES, Chunk, WireFormat, decode_concat, encode_error,
-    encode_flat,
+    encode_flat, encode_flat_batch,
 )
 from repro.runtime.policy import needs_resync
 
@@ -124,6 +124,15 @@ class DispatchPayload:
     processed server-side: 4*P for any fresh encode (full, personalized, or
     a cache miss), 0 for a cache hit.  The simulator's encode-time model
     prices it; the wire bytes (``nbytes``) are unchanged by caching.
+
+    ``hop`` identifies the encode instance this payload's content came from
+    (the multicast cache key for shared hops, the fold key for personalized
+    fold-ins, None for full snapshots).  It is server-side bookkeeping that
+    lets the cohort layer (runtime/cohorts.py) memoize per-delivery residual
+    mismatch norms — every payload carrying the same hop implies the same
+    content.  ``batched=True`` marks a fold payload that came out of an
+    ``encode_many`` coalesced pass: its ``encode_cost_bytes`` is 0 because
+    the whole batch's source cost is accounted once by the caller.
     """
     cid: int
     target_version: int
@@ -137,6 +146,8 @@ class DispatchPayload:
     resync: bool = False
     ratio: Optional[float] = None
     encode_cost_bytes: int = 0
+    hop: Optional[tuple] = None
+    batched: bool = False
 
     @property
     def full(self) -> bool:
@@ -205,6 +216,25 @@ class DispatchSession:
         self.cache_hits = 0
         self.cache_misses = 0
 
+    # ------------------------------------------------------ tracking hooks
+    # Per-client tracking state is reached only through these narrow
+    # accessors, so a subclass can swap the O(clients) residual dict for
+    # cohort-shared state (runtime/cohorts.py CohortDispatchSession)
+    # without touching the wire protocol above them.  The base
+    # implementations are the per-client dicts, unchanged.
+
+    def held_version(self, cid: int) -> Optional[int]:
+        """The last global version ``cid`` fully received (None if
+        untracked)."""
+        return self.versions.get(cid)
+
+    def tracks(self, cid: int) -> bool:
+        return cid in self.versions
+
+    def _residual_of(self, cid: int) -> Optional[jnp.ndarray]:
+        """The error-feedback residual backing ``held_flat`` for ``cid``."""
+        return self.residuals.get(cid)
+
     # ---------------------------------------------------------------- wire
     def ring_versions(self, current: int) -> set[int]:
         """Versions the bounded ring retains at global version ``current``."""
@@ -242,7 +272,8 @@ class DispatchSession:
     def encode(self, cid: int, target: int,
                ring: dict[int, jnp.ndarray],
                materialize: bool = True,
-               ratio: Optional[float] = None) -> DispatchPayload:
+               ratio: Optional[float] = None,
+               _folds: Optional[list] = None) -> Optional[DispatchPayload]:
         """Encode one dispatch of global version ``target`` to ``cid``.
 
         ``ring`` maps version -> flat (P,) global (the server's
@@ -263,15 +294,22 @@ class DispatchSession:
         it, paying the chunk build it actually performs).  Delta payloads
         always materialize: the error-feedback residual is defined by what
         the encoded wire actually delivers.
+
+        ``_folds`` (internal, see :meth:`encode_many`): when given, a
+        personalized fold-in encode is *deferred* — its request is appended
+        to the list and ``encode`` returns None; every other outcome
+        (shared hop, cached fold, full snapshot) returns its payload
+        immediately.  ``encode_many`` then lands all deferred folds with
+        one batched encode pass, byte-identically.
         """
         g = ring[target]
         fmt = self._fmt_for(ratio)
         wire_ratio = fmt.topk_ratio if fmt.scheme == "topk" else None
-        held = self.versions.get(cid)
+        held = self.held_version(cid)
         usable = (held is not None and held in ring
                   and held in self.ring_versions(target))
         if fmt.delta_coded and usable:
-            r = self.residuals.get(cid)
+            r = self._residual_of(cid)
             p = int(g.shape[0])
             delta = None
             if self.multicast:
@@ -317,21 +355,12 @@ class DispatchSession:
                         cid=cid, target_version=target, base_version=held,
                         scheme=fmt.scheme, param_size=p, chunks=chunks,
                         nbytes=nbytes, residual=err, shared=True,
-                        ratio=wire_ratio, encode_cost_bytes=cost)
+                        ratio=wire_ratio, encode_cost_bytes=cost, hop=key)
             # personalized fold-in encode: multicast off, or this client's
             # accumulated residual tripped the resync threshold — same wire
             # bytes as the shared hop, but the payload re-ships the residual
-            if delta is None:
-                delta = g - ring[held]
-            vec = delta if r is None else delta + r
-            chunks = encode_flat(vec, fmt)
-            return DispatchPayload(
-                cid=cid, target_version=target, base_version=held,
-                scheme=fmt.scheme, param_size=p, chunks=chunks,
-                nbytes=sum(c.nbytes for c in chunks),
-                residual=encode_error(vec, chunks, fmt),
-                shared=False, resync=(self.multicast and r is not None),
-                ratio=wire_ratio, encode_cost_bytes=4 * p)
+            return self._encode_personalized(cid, target, held, fmt, g, ring,
+                                             delta, r, wire_ratio, _folds)
         # full snapshot: raw schemes ship themselves; delta schemes fall
         # back to exact raw f32 (a lossy top-k of the *whole model* would be
         # meaningless for a client with no base)
@@ -370,18 +399,140 @@ class DispatchSession:
                     else closed_form),
             encode_cost_bytes=4 * p)
 
+    # ----------------------------------------------------- personalized fold
+    def _fold_key(self, cid: int, held: int, target: int,
+                  fmt: WireFormat) -> tuple:
+        """Identity of one personalized fold-in encode's content.  Per
+        client in the base session — the folded vec carries this client's
+        own residual, so no two clients' folds can share bytes.  Cohort
+        sessions key on the shared cohort residual instead, which is what
+        lets ``encode_many`` dedup (and the cohort session cache) fold
+        encodes across members."""
+        return (cid, held, target, fmt.scheme, fmt.topk_ratio,
+                fmt.chunk_elems)
+
+    def _fold_encoded(self, fold_key: tuple, chunks: list[Chunk],
+                      err: Optional[jnp.ndarray], nbytes: int) -> None:
+        """Hook: a fold encode materialized (inline or batched).  The base
+        session memoizes nothing — per-client folds never repeat
+        byte-identically; cohort sessions cache them per cohort."""
+
+    def _encode_personalized(self, cid: int, target: int, held: int,
+                             fmt: WireFormat, g: jnp.ndarray,
+                             ring: dict[int, jnp.ndarray],
+                             delta: Optional[jnp.ndarray],
+                             r: Optional[jnp.ndarray],
+                             wire_ratio: Optional[float],
+                             folds: Optional[list] = None
+                             ) -> Optional[DispatchPayload]:
+        """The classic EF payload ``delta + r``: cache-bypassed, re-ships
+        the accumulated residual.  With ``folds`` given, the request is
+        deferred for ``encode_many``'s batched pass instead (returns
+        None)."""
+        p = int(g.shape[0])
+        if delta is None:
+            delta = g - ring[held]
+        vec = delta if r is None else delta + r
+        resync = (self.multicast and r is not None)
+        fk = self._fold_key(cid, held, target, fmt)
+        if folds is not None:
+            folds.append((cid, target, held, fmt, vec, wire_ratio, resync,
+                          fk))
+            return None
+        chunks = encode_flat(vec, fmt)
+        err = encode_error(vec, chunks, fmt)
+        nbytes = sum(c.nbytes for c in chunks)
+        self._fold_encoded(fk, chunks, err, nbytes)
+        return DispatchPayload(
+            cid=cid, target_version=target, base_version=held,
+            scheme=fmt.scheme, param_size=p, chunks=chunks, nbytes=nbytes,
+            residual=err, shared=False, resync=resync,
+            ratio=wire_ratio, encode_cost_bytes=4 * p, hop=("fold",) + fk)
+
+    def encode_many(self, reqs: list[tuple], ring: dict[int, jnp.ndarray],
+                    materialize: bool = True
+                    ) -> tuple[list[DispatchPayload], int]:
+        """Encode one aggregation round's dispatch fan-out, coalescing all
+        personalized resync re-encodes into one batched encode pass per
+        wire format (``codecs.encode_flat_batch``) instead of one (P,)
+        encode per resynced client.
+
+        ``reqs`` is a list of ``(cid, target, ratio)`` triples; returns
+        ``(payloads, fold_cost_bytes)`` with ``payloads`` aligned to
+        ``reqs``.  Every payload is byte-identical to a sequential
+        ``encode`` call.  Batched fold payloads are marked
+        ``batched=True`` and carry ``encode_cost_bytes=0``: the batch's
+        fresh-encode source cost is returned once as ``fold_cost_bytes``
+        (4*P per wire-format group — the fused pass reads each stacked
+        source exactly once and overlaps with the cached-hop fan-out,
+        which is how the simulator prices it).  Fold requests with
+        identical fold keys (cohort members sharing one residual) encode
+        one stacked row, not one per member.
+        """
+        payloads: list[Optional[DispatchPayload]] = []
+        folds: list[tuple] = []
+        slots: list[int] = []            # payload index per deferred fold
+        for cid, target, ratio in reqs:
+            p = self.encode(cid, target, ring, materialize=materialize,
+                            ratio=ratio, _folds=folds)
+            if p is None:
+                slots.append(len(payloads))
+            payloads.append(p)
+        fold_cost = 0
+        if folds:
+            groups: dict[tuple, list[int]] = {}
+            for j, f in enumerate(folds):
+                fmt = f[3]
+                groups.setdefault(
+                    (fmt.scheme, fmt.topk_ratio, fmt.chunk_elems),
+                    []).append(j)
+            for idx in groups.values():
+                fmt = folds[idx[0]][3]
+                rows: list[jnp.ndarray] = []
+                row_of: dict[tuple, int] = {}
+                for j in idx:
+                    fk = folds[j][7]
+                    if fk not in row_of:
+                        row_of[fk] = len(rows)
+                        rows.append(folds[j][4])
+                chunk_lists = encode_flat_batch(rows, fmt)
+                fold_cost += 4 * int(rows[0].shape[0])
+                errs: dict[tuple, Optional[jnp.ndarray]] = {}
+                for j in idx:
+                    cid, target, held, fmt_j, vec, wire_ratio, resync, fk \
+                        = folds[j]
+                    chunks = chunk_lists[row_of[fk]]
+                    if fk not in errs:
+                        errs[fk] = encode_error(vec, chunks, fmt_j)
+                        self._fold_encoded(fk, chunks, errs[fk],
+                                           sum(c.nbytes for c in chunks))
+                    payloads[slots[j]] = DispatchPayload(
+                        cid=cid, target_version=target, base_version=held,
+                        scheme=fmt_j.scheme, param_size=int(vec.shape[0]),
+                        chunks=chunks,
+                        nbytes=sum(c.nbytes for c in chunks),
+                        residual=errs[fk], shared=False, resync=resync,
+                        ratio=wire_ratio, encode_cost_bytes=0,
+                        hop=("fold",) + fk, batched=True)
+        return payloads, fold_cost
+
     # ------------------------------------------------------------- tracking
     def deliver(self, payload: DispatchPayload) -> None:
         """The last wire chunk reached the client: commit version tracking,
         the error-feedback residual this payload implies, and the
         full/delta counters (payloads that die on the wire count nothing)."""
-        cid = payload.cid
         if payload.full:
             self.full_dispatches += 1
         else:
             self.delta_dispatches += 1
             if payload.resync:
                 self.resync_dispatches += 1
+        self._commit_tracking(payload)
+
+    def _commit_tracking(self, payload: DispatchPayload) -> None:
+        """Commit the version + residual state a delivery implies (the
+        tracking half of :meth:`deliver`, overridden by cohort sessions)."""
+        cid = payload.cid
         self.versions[cid] = payload.target_version
         if payload.full or payload.residual is None:
             # full snapshots reset error memory (f32 is exact; bf16 is a
@@ -416,7 +567,7 @@ class DispatchSession:
         g = ring[v]
         if self.fmt.scheme == "bf16":
             return g.astype(jnp.bfloat16).astype(jnp.float32)
-        r = self.residuals.get(cid)
+        r = self._residual_of(cid)
         return g if r is None else g - r
 
     # ----------------------------------------------------------- telemetry

@@ -192,17 +192,27 @@ class FLSimulation:
         return ev
 
     # ---------------------------------------------------------- dispatch
-    def _dispatch(self, cid: int):
+    def _dispatch(self, cid: int, payload=None,
+                  encode_delay: Optional[float] = None):
         E = self.server.cfg.local_epochs
         # raw/full payload chunks are never read here (the training base is
         # reconstructed server-side), so skip materialising them
-        payload = self.server.encode_dispatch(cid, materialize=False)
+        if payload is None:
+            payload = self.server.encode_dispatch(cid, materialize=False)
         if payload.ratio is not None:
             self.ratio_log.append({
                 "time": self.now, "cid": cid,
                 "round": payload.target_version, "ratio": payload.ratio})
-        enc = self._encode_time(payload)
-        self.encode_seconds += enc
+        if encode_delay is None:
+            enc = self._encode_time(payload)
+            self.encode_seconds += enc
+        else:
+            # resync batching: this payload came out of the round's one
+            # coalesced fold pass, whose source cost was accounted once by
+            # _on_aggregation — the delay is the shared batch-encode time,
+            # overlapping across every resynced client instead of
+            # serialising per-client encodes
+            enc = encode_delay
         t0 = self.now + enc + self._down_time(cid, payload.nbytes)
         ends, t = [], t0
         for _ in range(E):
@@ -311,13 +321,34 @@ class FLSimulation:
                "encode_s": self.encode_seconds,
                "dispatch_ratio": self.server.dispatch_ratio(),
                "loss": last_loss}
+        cs = self.server.cohort_stats()
+        if cs is not None:
+            rec["cohorts"] = cs["cohorts"]
+            rec["edge_partials"] = cs["edge_partials"]
         if self.eval_fn is not None and (agg.round % self.eval_every == 0):
             rec["acc"] = float(self.eval_fn(self.server.params))
         self.history.append(rec)
         for cid in agg.notify:
             self._notify(cid)
-        for cid in agg.dispatch:
-            self._dispatch(cid)
+        if (self.server.cfg.resync_batching
+                and self.server.dispatch is not None and agg.dispatch):
+            # resync batching: encode the whole fan-out in one pass —
+            # cached hops fan out as usual while every personalized resync
+            # fold coalesces into one batched encode whose source cost is
+            # priced once and overlapped across the resynced clients
+            payloads, fold_cost = self.server.encode_dispatch_round(
+                agg.dispatch, materialize=False)
+            batch_enc = 0.0
+            if self.cfg.encode_mbps > 0 and fold_cost:
+                batch_enc = fold_cost * 8.0 / (self.cfg.encode_mbps * 1e6)
+                self.encode_seconds += batch_enc
+            for cid, p in zip(agg.dispatch, payloads):
+                self._dispatch(cid, payload=p,
+                               encode_delay=(batch_enc if p.batched
+                                             else None))
+        else:
+            for cid in agg.dispatch:
+                self._dispatch(cid)
 
     # --------------------------------------------------------------- run
     def run(self, max_time: float = 1e9, max_rounds: int = 10_000,

@@ -103,6 +103,64 @@ def encode_update(cid: int, version: int, n_epochs: int,
 
 # --------------------------------------------------------------- server side
 
+# Auto-bypass probe: coalescing only ever loses on *large* chunks (the
+# batched fori_loop scatter serialises full-width rows that the eager path
+# overlaps as independent dispatches — BENCH_ingest's batch_flush_speedup
+# < 1 for f32/bf16 at 64 Ki elements, > 1 for the small-row compressed
+# schemes).  Tiny chunks always win by batching, so the probe only runs at
+# or above this element count — which also keeps the many small-chunk unit
+# tests on the deterministic batched path.
+_BYPASS_MIN_ELEMS = 4096
+
+# (chunk_elems, dtype name, flush_chunks) -> bypass?  One timing probe per
+# distinct shape per process; every batcher after that reads the cache.
+_bypass_probe_cache: dict[tuple, bool] = {}
+
+
+def _coalescing_loses(length: int, dtype, flush_chunks: int) -> bool:
+    """Cheap startup probe: time one flush-sized run of eager per-chunk
+    writes against one batched scatter of the same writes on a scratch
+    buffer, and report whether the batch is slower.  Both kernels are
+    warmed first so the probe times steady-state dispatch, not tracing."""
+    from repro.core.buffer import UpdateBuffer
+
+    key = (int(length), jnp.dtype(dtype).name, int(flush_chunks))
+    hit = _bypass_probe_cache.get(key)
+    if hit is not None:
+        return hit
+    rows = max(2, min(int(flush_chunks), 8))
+    scratch = UpdateBuffer(rows, param_size=int(length) * 2, dtype=dtype)
+    vals = jnp.ones((int(length),), jnp.float32)
+    items = [(i % rows, (i % 2) * int(length), vals)
+             for i in range(int(flush_chunks))]
+    # reserve-free scratch writes: the probe touches rows directly
+    scratch.write_range(0, 0, vals)                      # warm eager jit
+    scratch.write_batch(list(items))                     # warm batched jit
+    jax.block_until_ready(scratch._buf)
+
+    def eager():
+        for slot, start, v in items:
+            scratch.write_range(slot, start, v)
+        jax.block_until_ready(scratch._buf)
+
+    def batched():
+        scratch.write_batch(list(items))
+        jax.block_until_ready(scratch._buf)
+
+    t_eager = min(_time_once(eager) for _ in range(3))
+    t_batch = min(_time_once(batched) for _ in range(3))
+    loses = t_batch > t_eager
+    _bypass_probe_cache[key] = loses
+    return loses
+
+
+def _time_once(fn) -> float:
+    import time
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
 class IngestBatcher:
     """Double-buffered batch queue for the multi-client streaming path.
 
@@ -125,12 +183,16 @@ class IngestBatcher:
     recycled row can never be corrupted by a stale write.
     """
 
-    def __init__(self, buffer, flush_chunks: int = 16):
+    def __init__(self, buffer, flush_chunks: int = 16,
+                 auto_bypass: bool = False):
         self.buffer = buffer
         self.flush_chunks = max(1, int(flush_chunks))
+        self.auto_bypass = bool(auto_bypass)
+        self._bypass: Optional[bool] = None   # probe verdict, decided once
         self._fill: list[tuple[int, int, jnp.ndarray]] = []
         self.flushes = 0
         self.chunks_batched = 0
+        self.chunks_bypassed = 0     # eager pass-through writes (auto-bypass)
         self.writes_issued = 0       # donated scatters actually dispatched
 
     @property
@@ -138,6 +200,20 @@ class IngestBatcher:
         return len(self._fill)
 
     def enqueue(self, slot: int, start: int, vals: jnp.ndarray) -> None:
+        if self.auto_bypass and int(vals.shape[0]) >= _BYPASS_MIN_ELEMS:
+            if self._bypass is None:
+                self._bypass = _coalescing_loses(
+                    int(vals.shape[0]), self.buffer.dtype,
+                    self.flush_chunks)
+            if self._bypass:
+                # eager pass-through: coalescing loses at this chunk shape
+                # (probe verdict), so the write lands immediately.  Order
+                # vs queued writes is safe — every (slot, window) on the
+                # wire is disjoint, and same-slot chunks of one session
+                # are disjoint in-order windows.
+                self.buffer.write_range(slot, start, vals)
+                self.chunks_bypassed += 1
+                return
         self._fill.append((slot, start, vals))
         if len(self._fill) >= self.flush_chunks:
             self.flush()

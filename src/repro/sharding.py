@@ -32,6 +32,7 @@ __all__ = [
     "param_pspecs",
     "named_sharding",
     "shard_update_buffer",
+    "shard_cohort_state",
     "DEFAULT_RULES",
 ]
 
@@ -76,6 +77,9 @@ DEFAULT_RULES: dict[str, tuple[str, ...] | None] = {
     "expert": None,
     "kv_seq": ("model",),
     "buffer": ("pod",),
+    # SEAFL cohort-shared dispatch residuals: each cohort's one (P,)
+    # residual shards its element axis over 'pod' like the update buffer
+    "cohort": ("pod",),
     "seq": None,
     "embed": None,
     "heads": ("model",),
@@ -267,3 +271,30 @@ def shard_update_buffer(buf):
         return buf
     return jax.device_put(
         buf, NamedSharding(rules.mesh, P(resolved, None)))
+
+
+def shard_cohort_state(vec):
+    """Place a cohort-shared (P,) dispatch residual per
+    DEFAULT_RULES['cohort'].
+
+    Unlike the update buffer (which shards its *slot* axis), a cohort
+    residual is a single flat vector, so its element axis shards over the
+    'pod' mesh axis — the cohort table holds O(cohorts) of these and they
+    dominate its resident bytes.  Off-mesh, or when P does not divide the
+    pod axis size, the vector is left as-is (replicated) — single-device
+    tests and CPU benches hit this path.
+    """
+    rules = current_rules()
+    if rules.mesh is None:
+        return vec
+    resolved = rules.resolve("cohort")
+    if resolved is None:
+        return vec
+    axes = (resolved,) if isinstance(resolved, str) else tuple(resolved)
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+    total = 1
+    for a in axes:
+        total *= sizes.get(a, 1)
+    if total <= 1 or vec.shape[0] % total != 0:
+        return vec
+    return jax.device_put(vec, NamedSharding(rules.mesh, P(resolved)))

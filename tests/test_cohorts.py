@@ -1,0 +1,676 @@
+"""Cohorted fleet state + two-tier hierarchical aggregation.
+
+Tentpole contract (ISSUE 6): the cohort — (held version, drift band,
+kind) — is the unit of server-side fleet state.  The CohortTable keeps
+ONE shared (P,) EF residual per cohort (write-once per generation) plus
+O(clients) *scalars* (membership keys, mismatch bounds); the
+CohortDispatchSession serves every member from the shared state through
+the base session's unchanged wire protocol; the edge-aggregation tier
+pre-combines same-version uploads into one weighted (P,) partial per
+(K, P) buffer slot.  ``cohorts='off'`` must stay bit-for-bit the
+pre-cohort engine: same payload bytes, same RNG stream, same aggregation
+results, same checkpoint shape.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.buffer import Update, UpdateBuffer
+from repro.core.server import FLConfig, SeaflServer
+from repro.runtime.cohorts import (
+    KIND_DELTA, KIND_EXACT, CohortDispatchSession, CohortTable,
+)
+from repro.runtime.dispatch import DispatchSession, apply_dispatch
+from repro.runtime.transport import make_wire_format
+
+
+def make_server(algorithm="seafl", n=12, M=6, K=3, beta=4.0, **kw):
+    params = {"w": jnp.zeros((11, 7)), "b": {"c": jnp.zeros((13,))}}
+    cfg = FLConfig(algorithm=algorithm, n_clients=n, concurrency=M,
+                   buffer_size=K, staleness_limit=beta, seed=0, **kw)
+    s = SeaflServer(cfg, params, {i: 10 * (i + 1) for i in range(n)})
+    s.start()
+    return s
+
+
+def perturbed(base, rng, scale=0.1):
+    return jax.tree.map(lambda x: x + scale * jnp.asarray(
+        rng.normal(size=x.shape).astype(np.float32)), base)
+
+
+def make_ring(p=500, depth=6, scale=0.01, seed=0):
+    rng = np.random.default_rng(seed)
+    ring = {0: jnp.asarray(rng.normal(size=p).astype(np.float32))}
+    for v in range(1, depth):
+        ring[v] = ring[v - 1] + scale * jnp.asarray(
+            rng.normal(size=p).astype(np.float32))
+    return ring
+
+
+def chunks_equal(a, b):
+    if a is None or b is None or len(a) != len(b):
+        return False
+    for ca, cb in zip(a, b):
+        la, lb = jax.tree.leaves(ca.payload), jax.tree.leaves(cb.payload)
+        if len(la) != len(lb):
+            return False
+        for xa, xb in zip(la, lb):
+            if not np.array_equal(np.asarray(xa), np.asarray(xb)):
+                return False
+    return True
+
+
+def cohort_session(spec="topk:0.1", history=6, **kw):
+    return CohortDispatchSession(make_wire_format(spec, 128),
+                                 history=history, **kw)
+
+
+# ------------------------------------------------------- cohort membership
+
+def test_co_moving_clients_share_one_cohort_and_one_residual():
+    """Clients delivered the same hops land in one cohort holding exactly
+    one shared (P,) residual — the table's array state is O(cohorts) no
+    matter how many members ride along."""
+    ring = make_ring()
+    sess = cohort_session()
+    fleet = range(10)
+    for cid in fleet:
+        sess.deliver(sess.encode(cid, 0, ring))      # full snapshot
+    t = sess.table
+    assert t.n_cohorts() == 1 and t.n_members() == 10
+    assert t.key_of(3) == (0, None, KIND_EXACT)
+    assert t.stats()["residual_cohorts"] == 0        # exact: no residual
+    for cid in fleet:
+        sess.deliver(sess.encode(cid, 1, ring))      # shared delta hop
+    assert t.n_cohorts() == 1 and t.n_members() == 10
+    assert t.key_of(3) == (1, sess.fmt.topk_ratio, KIND_DELTA)
+    # ONE residual array serves all 10 members, and it equals the shared
+    # encode error the per-client engine would have stored for each
+    assert t.stats()["residual_cohorts"] == 1
+    assert t.stats()["residual_writes"] == 1
+    ref = DispatchSession(sess.fmt, history=6)
+    for cid in fleet:
+        ref.deliver(ref.encode(cid, 0, ring))
+        ref.deliver(ref.encode(cid, 1, ring))
+    np.testing.assert_array_equal(
+        np.asarray(t.residual_vec(t.key_of(3))),
+        np.asarray(ref.residuals[3]))
+    assert len(ref.residuals) == 10                  # the O(clients) cost
+
+
+def test_cohort_residual_bytes_independent_of_member_count():
+    ring = make_ring(p=256)
+    small, big = cohort_session(), cohort_session()
+    for cid in range(2):
+        small.deliver(small.encode(cid, 0, ring))
+        small.deliver(small.encode(cid, 1, ring))
+    for cid in range(50):
+        big.deliver(big.encode(cid, 0, ring))
+        big.deliver(big.encode(cid, 1, ring))
+    assert big.table.resident_bytes() == small.table.resident_bytes()
+    assert big.table.n_members() == 50
+
+
+def test_cohort_payloads_byte_identical_to_per_client_session():
+    """The wire protocol above the tracking hooks is untouched: every
+    payload a cohort session ships matches the per-client session
+    byte-for-byte while clients co-move."""
+    ring = make_ring()
+    a = cohort_session()
+    b = DispatchSession(make_wire_format("topk:0.1", 128), history=6)
+    for target in range(4):
+        for cid in (1, 2, 3):
+            pa, pb = a.encode(cid, target, ring), b.encode(cid, target, ring)
+            assert pa.nbytes == pb.nbytes
+            assert pa.scheme == pb.scheme and pa.full == pb.full
+            assert chunks_equal(pa.chunks, pb.chunks)
+            a.deliver(pa)
+            b.deliver(pb)
+
+
+def test_last_member_out_frees_the_cohort_residual():
+    ring = make_ring()
+    sess = cohort_session()
+    for cid in (1, 2):
+        sess.deliver(sess.encode(cid, 0, ring))
+        sess.deliver(sess.encode(cid, 1, ring))
+    assert sess.table.stats()["residual_cohorts"] == 1
+    sess.drop(1)
+    assert sess.table.n_members() == 1
+    sess.drop(2)
+    assert sess.table.n_members() == 0
+    assert sess.table.stats()["residual_cohorts"] == 0
+    assert sess.table.resident_bytes() == 0
+
+
+def test_cohort_fold_encode_cached_per_cohort():
+    """Personalized fold-in encodes (multicast off) key on the cohort, so
+    members of one cohort share a single fold encode byte-identically."""
+    ring = make_ring()
+    sess = cohort_session(use_cache=True, multicast=False)
+    for cid in (1, 2, 3):
+        sess.deliver(sess.encode(cid, 0, ring))
+    m0 = sess.fold_misses
+    payloads = [sess.encode(cid, 1, ring) for cid in (1, 2, 3)]
+    assert sess.fold_misses - m0 == 1 and sess.fold_hits == 2
+    assert payloads[1].encode_cost_bytes == 0
+    assert chunks_equal(payloads[0].chunks, payloads[1].chunks)
+    assert chunks_equal(payloads[0].chunks, payloads[2].chunks)
+
+
+# --------------------------------------------------- mismatch escape hatch
+
+def _diverge_client(sess, ring):
+    """Drive cids 1,2 along different hop paths into the same destination
+    cohort: 1 goes 0->1->2 (accumulating two shared-encode errors), 2 goes
+    0->2 directly (one error) — the later arrival joins a cohort whose
+    stored residual differs from its implied one."""
+    for cid in (1, 2):
+        sess.deliver(sess.encode(cid, 0, ring))
+    sess.deliver(sess.encode(1, 1, ring))
+    sess.deliver(sess.encode(1, 2, ring))    # cid 1 defines cohort (2,d)
+    sess.deliver(sess.encode(2, 2, ring))    # cid 2 joins with 0->2 implied
+    return sess
+
+
+def test_join_mismatch_is_bounded_and_scalar():
+    sess = _diverge_client(cohort_session(), make_ring())
+    t = sess.table
+    assert t.key_of(1) == t.key_of(2)            # same cohort...
+    assert t.mismatch_of(1) == 0.0               # definer is exact
+    assert t.mismatch_of(2) > 0.0                # joiner carries the bound
+    assert isinstance(t.mismatch_of(2), float)   # a scalar, never a (P,)
+    assert t.stats()["residual_cohorts"] == 1    # still one shared array
+
+
+def test_mismatch_resync_forces_exact_full_snapshot():
+    """A member whose mismatch bound trips the resync economics gets the
+    bounded escape hatch: one exact full snapshot, fresh cohort, zero
+    mismatch."""
+    ring = make_ring()
+    sess = _diverge_client(cohort_session(resync=1e-6), make_ring())
+    p = sess.encode(2, 3, ring)
+    assert p.full and p.scheme == "f32"          # exact resync payload
+    assert sess.mismatch_resyncs == 1
+    np.testing.assert_array_equal(np.asarray(apply_dispatch(p, sess.fmt)),
+                                  np.asarray(ring[3]))
+    sess.deliver(p)
+    assert sess.table.mismatch_of(2) == 0.0
+    assert sess.table.key_of(2) == (3, None, KIND_EXACT)
+
+
+def test_zero_mismatch_members_never_forced():
+    ring = make_ring()
+    sess = cohort_session(resync=1e-6)
+    for cid in (1, 2):
+        sess.deliver(sess.encode(cid, 0, ring))
+        sess.deliver(sess.encode(cid, 1, ring))
+    p = sess.encode(1, 2, ring)                  # co-mover: still a delta
+    assert not p.full
+    assert sess.mismatch_resyncs == 0
+
+
+def test_mismatch_norm_memoized_per_hop():
+    """N members joining a cohort off one shared hop compute the join
+    penalty norm once, not once per member."""
+    ring = make_ring()
+    sess = cohort_session()
+    fleet = range(8)
+    for cid in fleet:
+        sess.deliver(sess.encode(cid, 0, ring))
+    sess.deliver(sess.encode(99, 0, ring))
+    sess.deliver(sess.encode(99, 1, ring))
+    sess.deliver(sess.encode(99, 2, ring))       # 99 defines cohort (2,d)
+    for cid in fleet:                            # all join via the 0->2 hop
+        sess.deliver(sess.encode(cid, 2, ring))
+    t = sess.table
+    assert t.memo_misses == 1 and t.memo_hits == len(fleet) - 1
+    assert all(t.mismatch_of(c) == t.mismatch_of(0) for c in fleet)
+
+
+# -------------------------------------------------- two-tier edge aggregation
+
+def test_buffer_merge_rows_weighted_mean_exact():
+    buf = UpdateBuffer(4, 8)
+    s1 = buf.reserve(Update(1, 10, 0, 1))
+    buf.write_range(s1, 0, jnp.full((8,), 2.0))
+    buf.commit(s1)
+    s2 = buf.reserve(Update(2, 30, 0, 1))
+    buf.write_range(s2, 0, jnp.full((8,), 6.0))
+    buf.commit(s2)
+    buf.merge_rows(s1, s2, 10.0, 30.0)
+    np.testing.assert_allclose(
+        np.asarray(buf.stacked_flat()[s1]), 5.0, rtol=1e-6)
+
+
+def test_buffer_uncommit_recycles_row():
+    buf = UpdateBuffer(2, 4)
+    s1 = buf.reserve(Update(1, 1, 0, 1))
+    buf.commit(s1)
+    s2 = buf.reserve(Update(2, 1, 0, 1))
+    buf.commit(s2)
+    assert len(buf) == 2
+    u = buf.uncommit(s2)
+    assert u.client_id == 2 and len(buf) == 1
+    s3 = buf.reserve(Update(3, 1, 0, 1))     # the freed row is reusable
+    assert s3 == s2
+
+
+def test_edge_absorb_merges_same_version_uploads_into_one_slot():
+    """Two-tier aggregation: same-version uploads fold into one weighted
+    (P,) partial occupying ONE buffer slot; the merged head carries the
+    absorbed client ids and the summed sample count."""
+    rng = np.random.default_rng(0)
+    s = make_server(K=3, cohorts="on")
+    cids = sorted(s.active)[:2]
+    models = {}
+    for cid in cids:
+        s.deliver_dispatch(cid, s.encode_dispatch(cid))
+        models[cid] = perturbed(s.dispatch_model(cid), rng)
+    s.on_update(cids[0], models[cids[0]], n_epochs=1)
+    assert len(s.buffer) == 1
+    s.on_update(cids[1], models[cids[1]], n_epochs=1)
+    assert len(s.buffer) == 1                    # merged, not appended
+    head, _ = s.buffer._committed[-1]
+    n0, n1 = (s.client_sizes[c] for c in cids)
+    assert head.n_samples == n0 + n1
+    assert sorted(head.meta["merged_cids"]) == sorted(cids)
+    # the merged row is the exact sample-weighted mean of the two models
+    f0 = np.asarray(s.packer.pack(models[cids[0]]), np.float32)
+    f1 = np.asarray(s.packer.pack(models[cids[1]]), np.float32)
+    want = (n0 * f0 + n1 * f1) / (n0 + n1)
+    got = np.asarray(s.buffer.stacked_flat()[s.buffer._committed[-1][1]])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_edge_merged_aggregation_matches_per_client_fedavg():
+    """fedavg's aggregate is a pure sample-weighted mean, so pre-combining
+    same-version uploads at the edge must reproduce the per-client global
+    model to float tolerance."""
+    results = {}
+    for mode in ("off", "on"):
+        rng = np.random.default_rng(7)
+        # fedavg triggers on concurrency, so align M with the upload count
+        s = make_server(algorithm="fedavg", M=3, K=3, cohorts=mode)
+        cids = sorted(s.active)[:3]
+        for cid in cids:
+            s.deliver_dispatch(cid, s.encode_dispatch(cid))
+        for cid in cids:
+            s.on_update(cid, perturbed(s.dispatch_model(cid), rng),
+                        n_epochs=1)
+        assert s.total_aggregations == 1
+        results[mode] = np.asarray(s.global_flat)
+    np.testing.assert_allclose(results["on"], results["off"],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_edge_partials_counted_and_reset_per_round():
+    rng = np.random.default_rng(1)
+    s = make_server(K=3, cohorts="on")
+    cids = sorted(s.active)[:3]
+    for cid in cids:
+        s.deliver_dispatch(cid, s.encode_dispatch(cid))
+    for cid in cids:
+        s.on_update(cid, perturbed(s.dispatch_model(cid), rng), n_epochs=1)
+    assert s.total_aggregations == 1             # K counts *merged* slots
+    cs = s.cohort_stats()
+    assert cs["edge_partials"] == 2 and cs["edge_merges_total"] == 2
+    assert s._edge_merges_round == 0             # reset for the next round
+
+
+def test_off_mode_has_no_edge_tier():
+    rng = np.random.default_rng(1)
+    s = make_server(dispatch_compression="topk:0.1", K=3, cohorts="off")
+    cids = sorted(s.active)[:2]
+    for cid in cids:
+        s.deliver_dispatch(cid, s.encode_dispatch(cid))
+        s.on_update(cid, perturbed(s.dispatch_model(cid), rng), n_epochs=1)
+    assert len(s.buffer) == 2                    # one slot per upload
+    assert s.cohort_stats() is None
+    assert isinstance(s.dispatch, DispatchSession)
+    assert not isinstance(s.dispatch, CohortDispatchSession)
+
+
+# ----------------------------------------------------- off-mode bit-for-bit
+
+def test_off_mode_state_dict_keeps_pre_cohort_shape():
+    """cohorts='off' checkpoints must stay PR-5 shaped: no cohort keys, so
+    a pre-cohort consumer (or an off-mode server) reads them unchanged."""
+    rng = np.random.default_rng(3)
+    s = make_server(dispatch_compression="topk:0.1", cohorts="off")
+    for _ in range(4):
+        cid = sorted(s.active)[0]
+        s.deliver_dispatch(cid, s.encode_dispatch(cid))
+        s.on_update(cid, perturbed(s.dispatch_model(cid), rng), n_epochs=1)
+    state = s.state_dict()
+    assert "updates_since_agg" not in state
+    assert "edge_slots" not in state
+    assert "cohort" not in state["dispatch"]
+
+
+def test_pre_cohort_checkpoint_restores_into_off_mode():
+    """A PR-5 era checkpoint (no cohort keys anywhere) restores cleanly
+    into cohorts='off' and keeps serving byte-identical dispatches."""
+    rng = np.random.default_rng(3)
+    s = make_server(dispatch_compression="topk:0.1", cohorts="off")
+    for _ in range(5):
+        cid = sorted(s.active)[0]
+        s.deliver_dispatch(cid, s.encode_dispatch(cid))
+        s.on_update(cid, perturbed(s.dispatch_model(cid), rng), n_epochs=1)
+    state, trees = s.state_dict(), s.checkpoint_trees()
+    # strip anything a pre-cohort writer could not have written
+    assert not (set(state) & {"updates_since_agg", "edge_slots"})
+    s2 = make_server(dispatch_compression="topk:0.1", cohorts="off")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")           # restore must not warn
+        s2.load_state(state, trees)
+    assert s2.dispatch.versions == s.dispatch.versions
+    cid = sorted(s.active)[0]
+    pa, pb = s.encode_dispatch(cid), s2.encode_dispatch(cid)
+    assert pa.nbytes == pb.nbytes
+    assert chunks_equal(pa.chunks, pb.chunks)
+
+
+def test_pre_cohort_checkpoint_into_cohort_mode_warns_and_resets_dispatch():
+    """Restoring per-client dispatch state into a cohort session cannot be
+    done faithfully — the server must warn and start dispatch tracking
+    cold rather than silently misattribute residuals."""
+    rng = np.random.default_rng(3)
+    s = make_server(dispatch_compression="topk:0.1", cohorts="off")
+    cid = sorted(s.active)[0]
+    s.deliver_dispatch(cid, s.encode_dispatch(cid))
+    s.on_update(cid, perturbed(s.dispatch_model(cid), rng), n_epochs=1)
+    state, trees = s.state_dict(), s.checkpoint_trees()
+    s2 = make_server(dispatch_compression="topk:0.1", cohorts="on")
+    with pytest.warns(UserWarning):
+        s2.load_state(state, trees)
+    assert s2.dispatch.versions == {}
+    assert s2.round == s.round                   # non-dispatch state lands
+
+
+# ----------------------------------------------------- cohort checkpointing
+
+def _driven_cohort_server(rng, uploads=5):
+    s = make_server(dispatch_compression="topk:0.1", cohorts="on", K=3)
+    for _ in range(uploads):
+        cid = sorted(s.active)[0]
+        s.deliver_dispatch(cid, s.encode_dispatch(cid))
+        s.on_update(cid, perturbed(s.dispatch_model(cid), rng), n_epochs=1)
+    return s
+
+
+def test_cohort_checkpoint_roundtrip_membership_residuals_partials():
+    """state_dict/load_state round-trips the full cohort layer: table
+    membership, mismatch bounds, shared residual arrays, counts and
+    generations, plus the in-flight edge partial slots."""
+    rng = np.random.default_rng(5)
+    s = _driven_cohort_server(rng, uploads=5)
+    assert len(s.buffer) > 0                     # in-flight edge partial
+    t = s.dispatch.table
+    state, trees = s.state_dict(), s.checkpoint_trees()
+
+    s2 = make_server(dispatch_compression="topk:0.1", cohorts="on", K=3)
+    s2.load_state(state, trees)
+    t2 = s2.dispatch.table
+    assert t2.member == t.member
+    assert t2.mismatch == t.mismatch
+    assert t2._count == t._count
+    assert t2._gen == t._gen
+    assert set(t2._residual) == set(t._residual)
+    for k in t._residual:
+        np.testing.assert_array_equal(np.asarray(t2._residual[k]),
+                                      np.asarray(t._residual[k]))
+    # edge partials: same buffered rows, same head metadata
+    assert len(s2.buffer) == len(s.buffer)
+    assert s2._updates_since_agg == s._updates_since_agg
+    assert set(s2._edge_slots) == set(s._edge_slots)
+    for v in s._edge_slots:
+        assert (s2._edge_slots[v][1].n_samples
+                == s._edge_slots[v][1].n_samples)
+        assert (s2._edge_slots[v][1].meta.get("merged_cids")
+                == s._edge_slots[v][1].meta.get("merged_cids"))
+    np.testing.assert_array_equal(np.asarray(s2.buffer.stacked_flat()),
+                                  np.asarray(s.buffer.stacked_flat()))
+    # and the restored server keeps dispatching byte-identically
+    cid = sorted(s.active)[0]
+    pa, pb = s.encode_dispatch(cid), s2.encode_dispatch(cid)
+    assert pa.nbytes == pb.nbytes
+    assert chunks_equal(pa.chunks, pb.chunks)
+
+
+def test_cohort_checkpoint_resumes_edge_merging():
+    """After restore, a same-version upload keeps folding into the
+    restored edge partial rather than opening a fresh slot."""
+    rng = np.random.default_rng(6)
+    s = _driven_cohort_server(rng, uploads=1)    # below trigger: slot open
+    state, trees = s.state_dict(), s.checkpoint_trees()
+    s2 = make_server(dispatch_compression="topk:0.1", cohorts="on", K=3)
+    s2.load_state(state, trees)
+    filled = len(s2.buffer)
+    merges0 = s2._edge_merges_round
+    v = s2.round
+    assert v in s2._edge_slots                   # restored in-flight partial
+    cid = sorted(s2.active)[0]
+    s2.deliver_dispatch(cid, s2.encode_dispatch(cid))    # holds version v
+    s2.on_update(cid, perturbed(s2.dispatch_model(cid), rng), n_epochs=1)
+    assert s2.total_aggregations == 0            # 2 of K=3: no drain yet
+    assert len(s2.buffer) == filled              # merged, no fresh slot
+    assert s2._edge_merges_round == merges0 + 1
+
+
+def test_cohort_table_standalone_roundtrip():
+    t = CohortTable()
+    t.move(1, (0, None, KIND_EXACT))
+    t.move(1, (1, 0.1, KIND_DELTA), implied=lambda: jnp.ones((16,)))
+    t.move(2, (1, 0.1, KIND_DELTA),
+           implied=lambda: jnp.full((16,), 1.5), hop=("h", 1))
+    t2 = CohortTable()
+    t2.load_state(t.state_dict(), t.residual_trees())
+    assert t2.member == t.member
+    assert t2.mismatch[2] == pytest.approx(t.mismatch[2])
+    assert t2._count == t._count and t2._gen == t._gen
+    np.testing.assert_array_equal(
+        np.asarray(t2.residual_vec((1, 0.1, KIND_DELTA))),
+        np.asarray(t.residual_vec((1, 0.1, KIND_DELTA))))
+
+
+# ----------------------------------------------------------- fleet scaling
+
+def test_resident_state_bytes_breakdown():
+    rng = np.random.default_rng(2)
+    s = _driven_cohort_server(rng, uploads=4)
+    r = s.resident_state_bytes()
+    P = s.packer.size
+    assert r["dispatch_residual_bytes"] == s.dispatch.table.resident_bytes()
+    assert r["server_array_bytes"] == (r["history_bytes"]
+                                       + r["buffer_bytes"]
+                                       + r["dispatch_residual_bytes"])
+    assert r["history_bytes"] % (4 * P) == 0 and r["history_bytes"] > 0
+
+
+def test_cohort_state_stays_flat_as_fleet_grows():
+    """The in-process miniature of BENCH_fleet: 4 vs 40 clients walking
+    the same hops end with identical cohort array state, while per-client
+    mode's residual store grows with the fleet."""
+    ring = make_ring()
+
+    def drive(sess, n):
+        for cid in range(n):
+            sess.deliver(sess.encode(cid, 0, ring))
+            sess.deliver(sess.encode(cid, 1, ring))
+            sess.deliver(sess.encode(cid, 2, ring))
+        return sess
+
+    small = drive(cohort_session(), 4)
+    big = drive(cohort_session(), 40)
+    assert big.table.resident_bytes() == small.table.resident_bytes()
+    per_client = drive(DispatchSession(make_wire_format("topk:0.1", 128),
+                                       history=6), 40)
+    assert len(per_client.residuals) == 40
+
+
+# ------------------------------------------------------- end-to-end + sim
+
+def _experiment(cohorts, resync_batching=False, seed=3, rounds=8,
+                encode_mbps=0.0):
+    from repro.experiment import ExperimentConfig, run_experiment
+    from repro.runtime.simulator import SimConfig
+    fl = FLConfig(algorithm="seafl", n_clients=10, concurrency=5,
+                  buffer_size=2, staleness_limit=6, local_epochs=2,
+                  local_lr=0.05, batch_size=16, seed=seed,
+                  dispatch_compression="topk:0.1", dispatch_history=8,
+                  cohorts=cohorts, resync_batching=resync_batching)
+    cfg = ExperimentConfig(
+        dataset="tiny", n_train=300, n_test=240, model="mlp", fl=fl,
+        sim=SimConfig(speed_model="pareto", seed=seed,
+                      bandwidth_model="pareto", up_mbps=5.0,
+                      down_mbps=0.5, encode_mbps=encode_mbps),
+        seed=seed)
+    return run_experiment(cfg, max_rounds=rounds)
+
+
+def test_history_records_cohort_columns_only_in_cohort_mode():
+    sim_on, _ = _experiment("on")
+    recs = [h for h in sim_on.history if "round" in h]
+    assert recs and all("cohorts" in h and "edge_partials" in h
+                        for h in recs)
+    assert any(h["cohorts"] > 0 for h in recs)
+    sim_off, _ = _experiment("off")
+    assert all("cohorts" not in h and "edge_partials" not in h
+               for h in sim_off.history)
+
+
+def test_cohort_mode_accuracy_parity_end_to_end():
+    sim_on, _ = _experiment("on")
+    sim_off, _ = _experiment("off")
+
+    def tail_acc(sim):                           # smooth single-eval noise
+        accs = [h["acc"] for h in sim.history if "acc" in h]
+        return float(np.mean(accs[-3:]))
+
+    assert abs(tail_acc(sim_on) - tail_acc(sim_off)) <= 1e-2 + 1e-9
+    # and the cohort server really ran with collapsed state
+    assert isinstance(sim_on.server.dispatch, CohortDispatchSession)
+    assert sim_on.server.cohort_stats()["edge_merges_total"] >= 0
+
+
+def test_resync_batching_bit_for_bit_and_cheaper_encode_time():
+    """resync_batching is pure timeline accounting: wire bytes, RNG
+    stream and accuracies are untouched; priced encode seconds drop."""
+    base, _ = _experiment("on", resync_batching=False, encode_mbps=200.0)
+    bat, _ = _experiment("on", resync_batching=True, encode_mbps=200.0)
+    assert bat.server.bytes_downloaded == base.server.bytes_downloaded
+    assert bat.server.bytes_uploaded == base.server.bytes_uploaded
+    a = [round(h.get("acc", 0.0), 6) for h in base.history]
+    b = [round(h.get("acc", 0.0), 6) for h in bat.history]
+    assert a == b
+    assert bat.encode_seconds <= base.encode_seconds + 1e-9
+
+
+def test_cohorts_config_validated():
+    with pytest.raises(ValueError):
+        make_server(cohorts="sideways")
+
+
+# --------------------------------------------------------- ingest auto-bypass
+
+def test_auto_bypass_routes_big_chunks_and_stays_bit_identical():
+    from repro.runtime import transport as tr
+    K, P = 2, 10_000
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.normal(size=P).astype(np.float32))
+
+    def fill(**kw):
+        buf = UpdateBuffer(K, P)
+        batcher = tr.IngestBatcher(buf, flush_chunks=4, **kw)
+        for i in range(K):
+            slot = buf.reserve(Update(i, 1, 0, 1))
+            batcher.enqueue(slot, 0, vals)
+            batcher.flush()
+            buf.commit(slot)
+        return buf, batcher
+
+    old = dict(tr._bypass_probe_cache)
+    try:
+        key = (P, "float32", 4)
+        tr._bypass_probe_cache[key] = True       # probe says: bypass wins
+        buf_a, ba = fill(auto_bypass=True)
+        assert ba.chunks_bypassed == K
+        tr._bypass_probe_cache[key] = False      # probe says: coalesce
+        buf_b, bb = fill(auto_bypass=True)
+        assert bb.chunks_bypassed == 0
+        buf_c, bc = fill(auto_bypass=False)      # default: no probe at all
+        assert bc.chunks_bypassed == 0 and bc._bypass is None
+    finally:
+        tr._bypass_probe_cache.clear()
+        tr._bypass_probe_cache.update(old)
+    np.testing.assert_array_equal(np.asarray(buf_a.stacked_flat()),
+                                  np.asarray(buf_c.stacked_flat()))
+    np.testing.assert_array_equal(np.asarray(buf_b.stacked_flat()),
+                                  np.asarray(buf_c.stacked_flat()))
+
+
+def test_auto_bypass_skips_probe_for_small_chunks():
+    from repro.runtime import transport as tr
+    buf = UpdateBuffer(2, 64)
+    batcher = tr.IngestBatcher(buf, flush_chunks=4, auto_bypass=True)
+    slot = buf.reserve(Update(0, 1, 0, 1))
+    batcher.enqueue(slot, 0, jnp.ones((64,)))    # < _BYPASS_MIN_ELEMS
+    batcher.flush()
+    buf.commit(slot)
+    assert batcher._bypass is None               # never probed
+    assert batcher.chunks_bypassed == 0
+
+
+def test_probe_decision_cached_per_shape():
+    from repro.runtime import transport as tr
+    old = dict(tr._bypass_probe_cache)
+    timings = []
+    orig = tr._time_once                          # only the probe times
+
+    def counting(fn):
+        timings.append(fn)
+        return orig(fn)
+
+    tr._bypass_probe_cache.clear()
+    tr._time_once = counting
+    try:
+        P = tr._BYPASS_MIN_ELEMS
+        vals = jnp.ones((P,), jnp.float32)
+        for _ in range(3):
+            buf = UpdateBuffer(2, P)
+            b = tr.IngestBatcher(buf, flush_chunks=4, auto_bypass=True)
+            slot = buf.reserve(Update(0, 1, 0, 1))
+            b.enqueue(slot, 0, vals)
+            b.flush()
+        assert len(timings) == 6                 # 3 eager + 3 batched: once
+        assert len(tr._bypass_probe_cache) == 1  # verdict cached per shape
+    finally:
+        tr._time_once = orig
+        tr._bypass_probe_cache.clear()
+        tr._bypass_probe_cache.update(old)
+
+
+# -------------------------------------------------------- encode_many round
+
+def test_encode_dispatch_round_matches_sequential_encodes():
+    """The server's round-level batched encode (resync batching's engine)
+    must be byte-identical to per-client encode_dispatch calls."""
+    rng = np.random.default_rng(4)
+    for mode in ("off", "on"):
+        s = make_server(dispatch_compression="topk:0.1", cohorts=mode, K=3)
+        for _ in range(4):
+            cid = sorted(s.active)[0]
+            s.deliver_dispatch(cid, s.encode_dispatch(cid))
+            s.on_update(cid, perturbed(s.dispatch_model(cid), rng),
+                        n_epochs=1)
+        cids = sorted(s.active)[:4]
+        seq = [s.encode_dispatch(c) for c in cids]
+        batched, fold_cost = s.encode_dispatch_round(cids)
+        assert fold_cost >= 0
+        for a, b in zip(seq, batched):
+            assert a.nbytes == b.nbytes and a.full == b.full
+            assert chunks_equal(a.chunks, b.chunks)
