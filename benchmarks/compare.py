@@ -39,6 +39,7 @@ BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 BASELINE_DIR = os.path.join(BENCH_DIR, "baselines")
 FILES = ("BENCH_ingest.json", "BENCH_dispatch.json", "BENCH_fleet.json")
 THRESHOLD = 0.20          # fail below (1 - THRESHOLD) x baseline
+OBS_OVERHEAD_MAX_PCT = 5.0     # telemetry-on slowdown allowed on hot paths
 FLEET_STATE_GROWTH_MAX = 3.0   # cohort state across the 10^2..10^5 sweep
 FLEET_ACC_PARITY = 1e-2        # |acc(cohort) - acc(per-client)| per size
 FLEET_WALL_GATE_SIZE = "10000"  # the sweep point wall-clock gated vs base
@@ -127,6 +128,38 @@ def _gate_adaptive_ratio(data: dict, rows: list, failures: list) -> None:
                      None, float(saving), None, "info"))
 
 
+def _gate_observability(fname: str, data: dict, rows: list,
+                        failures: list) -> None:
+    """Gate the telemetry layer's cost on the wire hot paths.
+
+    A *within-report* invariant like ``_gate_adaptive_ratio``: each wire
+    bench times its dominant path twice — telemetry off vs on — and the
+    slowdown must stay under ``OBS_OVERHEAD_MAX_PCT``.  The layer's whole
+    contract is "cheap enough to leave on for measurement runs"; a hook
+    that grows a hot loop past the bound fails CI even when every
+    absolute throughput number still clears its baseline.
+    """
+    tag = f"{fname.removeprefix('BENCH_').removesuffix('.json')}" \
+          f"/telemetry_overhead_pct"
+    sec = data.get("observability")
+    if not sec:
+        failures.append(f"{tag}: observability section missing from the "
+                        f"current report (did the bench change?)")
+        return
+    pct = sec.get("overhead_pct")
+    if pct is None:
+        failures.append(f"{tag}: overhead_pct missing")
+        return
+    ok = pct <= OBS_OVERHEAD_MAX_PCT
+    if not ok:
+        failures.append(
+            f"{tag}: telemetry-on costs {pct:+.1f}% on {sec.get('path')} "
+            f"(> +{OBS_OVERHEAD_MAX_PCT:.0f}% gate) — the telemetry layer "
+            f"is no longer cheap enough to leave on")
+    rows.append((f"{tag}(<= {OBS_OVERHEAD_MAX_PCT:.0f}%)", None, float(pct),
+                 None, "ok" if ok else "REGRESSED"))
+
+
 def _gate_fleet(data: dict, base: dict, rows: list, failures: list) -> None:
     """Gate the fleet-size sweep (BENCH_fleet.json).
 
@@ -212,6 +245,8 @@ def compare(threshold: float = THRESHOLD) -> tuple[list[tuple], list[str]]:
         base_g, base_i = _flatten(fname, base_data)
         if fname == "BENCH_dispatch.json":
             _gate_adaptive_ratio(cur_data, rows, failures)
+        if fname in ("BENCH_ingest.json", "BENCH_dispatch.json"):
+            _gate_observability(fname, cur_data, rows, failures)
         if fname == "BENCH_fleet.json":
             _gate_fleet(cur_data, base_data, rows, failures)
         for metric in sorted(set(base_g) | set(cur_g)):

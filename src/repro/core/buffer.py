@@ -43,6 +43,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.telemetry import Telemetry, of as _tel_of
 from repro.sharding import shard_update_buffer
 
 
@@ -101,7 +102,8 @@ class UpdateBuffer:
     """Fixed-capacity slot buffer: metadata list + (capacity, P) device array."""
 
     def __init__(self, capacity: int, param_size: Optional[int] = None,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, telemetry: Optional[Telemetry] = None):
+        self.tel = _tel_of(telemetry)
         self.capacity = int(capacity)
         self.param_size = param_size
         self.dtype = jnp.dtype(dtype)
@@ -151,6 +153,8 @@ class UpdateBuffer:
         self._buf = shard_update_buffer(jnp.concatenate([old, grow], axis=0))
         for r in range(rows, 2 * rows):
             heapq.heappush(self._free, r)
+        self.tel.counter("buffer.spill_grow")
+        self.tel.gauge("buffer.rows", 2 * rows)
 
     def reserve(self, u: Update, param_size: Optional[int] = None) -> int:
         """Claim a free slot for a streaming upload."""
@@ -200,6 +204,8 @@ class UpdateBuffer:
         if slot not in self._pending:
             raise RuntimeError(f"slot {slot} is not a reserved slot")
         self._committed.append((self._pending.pop(slot), slot))
+        self.tel.gauge("buffer.committed", len(self._committed))
+        self.tel.gauge("buffer.pending", len(self._pending))
 
     def merge_rows(self, dst_slot: int, src_slot: int,
                    w_dst: float, w_src: float) -> None:

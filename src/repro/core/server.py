@@ -43,6 +43,7 @@ from repro.core.buffer import Update, UpdateBuffer
 from repro.runtime.cohorts import CohortDispatchSession
 from repro.runtime.dispatch import DispatchPayload, DispatchSession
 from repro.runtime.policy import DriftTracker, RatePolicy, RESYNC_MODES
+from repro.runtime.telemetry import Telemetry
 from repro.runtime.transport import (
     Chunk, FlatErrorFeedback, IngestBatcher, IngestSession, UploadPayload,
     encode_update as transport_encode_update, make_wire_format,
@@ -130,6 +131,14 @@ class FLConfig:
     # batched encode pass (DispatchSession.encode_many), overlapped with
     # the cached-hop fan-out by the simulator's encode-time model
     resync_batching: bool = False
+    # unified telemetry (runtime/telemetry.py): counters/gauges/histograms
+    # + trace spans threaded through every layer.  Off by default with
+    # pinned zero behavioral change (RNG stream, wire bytes, aggregation
+    # outputs bit-identical — the cohorts='off' discipline).
+    telemetry: bool = False
+    # opt-in kernel wall timings: block_until_ready around each seafl_agg
+    # aggregate call (changes device-dispatch overlap, never values)
+    telemetry_kernels: bool = False
     seed: int = 0
 
     def hyper(self) -> SeaflHyper:
@@ -153,12 +162,15 @@ class SeaflServer:
     """Holds global params (flat), buffer, version history, client activity."""
 
     def __init__(self, cfg: FLConfig, params: PyTree,
-                 client_sizes: dict[int, int]):
+                 client_sizes: dict[int, int],
+                 telemetry: Optional[Telemetry] = None):
         assert cfg.algorithm in ALGORITHMS, cfg.algorithm
         if cfg.buffer_dtype not in BUFFER_DTYPES:
             raise ValueError(f"buffer_dtype must be one of "
                              f"{sorted(BUFFER_DTYPES)}, got {cfg.buffer_dtype}")
         self.cfg = cfg
+        self.tel = (telemetry if telemetry is not None
+                    else Telemetry(enabled=cfg.telemetry))
         self.packer = ParamPacker(params)
         self._flat = self.packer.pack(params)          # current global, (P,)
         self.round = 0
@@ -181,7 +193,8 @@ class SeaflServer:
                 cfg.dispatch_history,
                 multicast=cfg.dispatch_multicast,
                 resync=cfg.dispatch_resync,
-                resync_mode=cfg.dispatch_resync_mode)
+                resync_mode=cfg.dispatch_resync_mode,
+                telemetry=self.tel)
         # drift-adaptive rate policy: validated here so a bad band config
         # fails at construction, not mid-run
         self.rate_policy = RatePolicy.from_config(cfg)
@@ -199,10 +212,15 @@ class SeaflServer:
         self._ratio_by_version: dict[int, float] = {}
         self._buffer_dtype = BUFFER_DTYPES[cfg.buffer_dtype]
         self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size,
-                                   dtype=self._buffer_dtype)
+                                   dtype=self._buffer_dtype,
+                                   telemetry=self.tel)
         self._batcher = (IngestBatcher(self.buffer, cfg.ingest_batch_chunks,
-                                       auto_bypass=cfg.ingest_auto_bypass)
+                                       auto_bypass=cfg.ingest_auto_bypass,
+                                       telemetry=self.tel)
                          if cfg.ingest_batch_chunks > 0 else None)
+        if self.tel.enabled and cfg.telemetry_kernels:
+            from repro.kernels.seafl_agg.ops import set_kernel_timing
+            set_kernel_timing(self.tel)
         # two-tier edge aggregation (cohorts='on'): same-version uploads
         # pre-combine into one resident (P,) partial per version, so the
         # buffer holds O(live versions) slots regardless of how many
@@ -361,8 +379,9 @@ class SeaflServer:
         ratio = None
         if self.cfg.dispatch_ratio_policy == "drift":
             ratio = self._ratio_by_version.get(target)
-        return self.dispatch.encode(cid, target, self._history,
-                                    materialize=materialize, ratio=ratio)
+        with self.tel.span("dispatch.encode", cid=cid, version=target):
+            return self.dispatch.encode(cid, target, self._history,
+                                        materialize=materialize, ratio=ratio)
 
     def encode_dispatch_round(self, cids: list[int],
                               materialize: bool = True
@@ -516,6 +535,8 @@ class SeaflServer:
         nbytes = sess.finish()           # raises while coverage is incomplete
         del self._ingests[cid]
         self.bytes_uploaded += nbytes
+        self.tel.counter("ingest.commits")
+        self.tel.histogram("ingest.upload_bytes", nbytes)
         if self._batcher is not None:
             # readers only ever see flushed rows: the slot's queued writes
             # (and any co-batched neighbours) land before the commit
@@ -604,42 +625,55 @@ class SeaflServer:
         stacked = self.buffer.stacked_flat()   # f32 or bf16 slots; kernels
         weights = None                         # accumulate in f32 either way
 
-        if cfg.algorithm == "fedavg":
-            self._flat, w = fedavg_aggregate_flat(
-                self._flat, stacked, jnp.asarray(sizes))
-            weights = np.asarray(w)
-        elif cfg.algorithm == "fedasync":
-            self._flat = fedasync_aggregate_flat(
-                self._flat, stacked[0], staleness[0],
-                cfg.fedasync_alpha0, cfg.fedasync_poly_a)
-        elif cfg.algorithm == "fedbuff":
-            # fedbuff_aggregate_flat yields w_t + eta*mean(w_k - w_t); true
-            # FedBuff deltas are vs each client's dispatch version, so add
-            # eta*(w_t - mean_k base_k) — a tiny combination over the few
-            # distinct live versions, not another (K, P) buffer pass.
-            g, k = self._flat, float(len(updates))
-            mixed, w = fedbuff_aggregate_flat(g, stacked, cfg.fedbuff_eta_g)
-            counts: dict[int, int] = {}
-            for u in updates:
-                counts[u.version] = counts.get(u.version, 0) + 1
-            base_mix = sum((n / k) * self._history[v]
-                           for v, n in counts.items())
-            self._flat = mixed + cfg.fedbuff_eta_g * (g - base_mix)
-            weights = np.asarray(w)
-        else:  # seafl / seafl2 — Eqs. (4)-(8), delta-free
-            # Eq. (5) importance is measured against the *current* global
-            # (the seafl_aggregate_from_params identity): cos(w_k - w_t^g,
-            # w_t^g), not the dispatch-version base.  This is the delta-free
-            # trade the engine is built on — the similarity question becomes
-            # "does this update still point somewhere useful from where the
-            # model is now", and the buffer never has to store deltas.
-            h = cfg.hyper()
-            self._flat, w = seafl_aggregate_flat_from_params(
-                self._flat, stacked, jnp.asarray(sizes),
-                jnp.asarray(staleness), h.alpha, h.mu, h.beta, h.theta,
-                use_importance=h.use_importance,
-                use_staleness=h.use_staleness)
-            weights = np.asarray(w)
+        with self.tel.span("server.aggregate", round=self.round,
+                           k=len(updates), algorithm=cfg.algorithm):
+            if cfg.algorithm == "fedavg":
+                self._flat, w = fedavg_aggregate_flat(
+                    self._flat, stacked, jnp.asarray(sizes))
+                weights = np.asarray(w)
+            elif cfg.algorithm == "fedasync":
+                self._flat = fedasync_aggregate_flat(
+                    self._flat, stacked[0], staleness[0],
+                    cfg.fedasync_alpha0, cfg.fedasync_poly_a)
+            elif cfg.algorithm == "fedbuff":
+                # fedbuff_aggregate_flat yields w_t + eta*mean(w_k - w_t);
+                # true FedBuff deltas are vs each client's dispatch version,
+                # so add eta*(w_t - mean_k base_k) — a tiny combination over
+                # the few distinct live versions, not another (K, P) pass.
+                g, k = self._flat, float(len(updates))
+                mixed, w = fedbuff_aggregate_flat(g, stacked,
+                                                  cfg.fedbuff_eta_g)
+                counts: dict[int, int] = {}
+                for u in updates:
+                    counts[u.version] = counts.get(u.version, 0) + 1
+                base_mix = sum((n / k) * self._history[v]
+                               for v, n in counts.items())
+                self._flat = mixed + cfg.fedbuff_eta_g * (g - base_mix)
+                weights = np.asarray(w)
+            else:  # seafl / seafl2 — Eqs. (4)-(8), delta-free
+                # Eq. (5) importance is measured against the *current*
+                # global (the seafl_aggregate_from_params identity):
+                # cos(w_k - w_t^g, w_t^g), not the dispatch-version base.
+                # This is the delta-free trade the engine is built on — the
+                # similarity question becomes "does this update still point
+                # somewhere useful from where the model is now", and the
+                # buffer never has to store deltas.
+                h = cfg.hyper()
+                self._flat, w = seafl_aggregate_flat_from_params(
+                    self._flat, stacked, jnp.asarray(sizes),
+                    jnp.asarray(staleness), h.alpha, h.mu, h.beta, h.theta,
+                    use_importance=h.use_importance,
+                    use_staleness=h.use_staleness)
+                weights = np.asarray(w)
+
+        if self.tel.enabled:
+            # per-update staleness + Eq. (5) adaptive-weight distributions:
+            # the histograms tests/benches cross-check against the buffer
+            self.tel.counter("agg.count")
+            self.tel.gauge("agg.buffer_fill", len(updates))
+            self.tel.histogram_many("agg.staleness", staleness)
+            if weights is not None:
+                self.tel.histogram_many("agg.weight", weights)
 
         # an edge partial contributes every client it absorbed; plain slots
         # carry their own id (identical to buffer.client_ids() when no
@@ -662,7 +696,7 @@ class SeaflServer:
             x = self._drift.observe(
                 float(jnp.linalg.norm(self._flat - prev_flat)))
             self._ratio_by_version[self.round] = \
-                self.rate_policy.ratio_for(x)
+                self.rate_policy.ratio_for(x, telemetry=self.tel)
         self._gc_history()
 
         # contributors + top-up to M go back to training on the new model
@@ -784,6 +818,10 @@ class SeaflServer:
                     for v, (_, hu) in self._edge_slots.items()
                 ],
             } if self._cohorts_on else {}),
+            # metrics snapshot rides with the checkpoint only when telemetry
+            # is on — off-mode state dicts keep their pre-telemetry shape
+            **({"telemetry": self.tel.snapshot()}
+               if self.tel.enabled else {}),
         }
 
     def checkpoint_trees(self) -> dict:
@@ -871,10 +909,12 @@ class SeaflServer:
                             else jnp.asarray(v, jnp.float32))
                 self._ef[int(k[2:])] = FlatErrorFeedback(residual)
         self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size,
-                                   dtype=self._buffer_dtype)
+                                   dtype=self._buffer_dtype,
+                                   telemetry=self.tel)
         self._batcher = (IngestBatcher(self.buffer,
                                        self.cfg.ingest_batch_chunks,
-                                       auto_bypass=self.cfg.ingest_auto_bypass)
+                                       auto_bypass=self.cfg.ingest_auto_bypass,
+                                       telemetry=self.tel)
                          if self.cfg.ingest_batch_chunks > 0 else None)
         for i, m in enumerate(state.get("buffer", [])):
             self.buffer.add(
@@ -896,3 +936,5 @@ class SeaflServer:
             self._edge_slots[int(v)] = (row, u)
         self._edge_merges_round = 0
         self._edge_partials_last = 0
+        if self.tel.enabled and "telemetry" in state:
+            self.tel.load_snapshot(state["telemetry"])

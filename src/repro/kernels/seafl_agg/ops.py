@@ -6,10 +6,18 @@ adaptive rule plus the baselines' weight rules, all expressed as one fused
 ``weighted_aggregate`` HBM pass over the (K, P) buffer.  The delta-free
 entry point (``seafl_aggregate_flat_from_params``) recovers the Eq. (5)
 cosine terms directly from client params, so no delta buffer ever exists.
+
+Kernel timing (opt-in): ``set_kernel_timing(telemetry)`` makes each public
+aggregate entry point block until its result is ready and record the wall
+time as a ``kernel.<name>_us`` histogram — the hook the per-chip autotuner
+builds on.  Off (the default) the entry points return un-synchronised like
+any jitted call: device overlap, values, and dtypes are untouched.
 """
 from __future__ import annotations
 
+import time
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +30,29 @@ from repro.kernels.seafl_agg.kernel import (
     similarity_partials_call, similarity_partials_from_params_call,
     weighted_agg_call,
 )
+
+# Opt-in kernel wall timing (FLConfig.telemetry_kernels): when set to an
+# enabled Telemetry, the public aggregate entry points block_until_ready
+# and record wall-time histograms.  None / disabled = plain jit dispatch.
+_KERNEL_TEL = None
+
+
+def set_kernel_timing(telemetry: Optional[object]) -> None:
+    """Install (or clear, with None) the Telemetry that times the public
+    aggregate entry points.  Process-wide by design: the opt-in flag is a
+    measurement mode, not protocol state."""
+    global _KERNEL_TEL
+    _KERNEL_TEL = telemetry
+
+
+def _timed(name: str, fn, *args, **kw):
+    tel = _KERNEL_TEL
+    if tel is None or not getattr(tel, "enabled", False):
+        return fn(*args, **kw)
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(*args, **kw))
+    tel.histogram(f"kernel.{name}_us", (time.perf_counter() - t0) * 1e6)
+    return out
 
 
 def _pad_to(x, m, axis=-1):
@@ -76,7 +107,7 @@ def _seafl_weights_flat(cos, data_sizes, staleness, alpha, mu, beta,
 
 @partial(jax.jit, static_argnames=("use_importance", "use_staleness",
                                    "block_p", "interpret"))
-def seafl_aggregate_flat(global_flat, stacked_params, stacked_deltas,
+def _seafl_aggregate_flat_jit(global_flat, stacked_params, stacked_deltas,
                          data_sizes, staleness, alpha, mu, beta, theta,
                          use_importance=True, use_staleness=True,
                          block_p=2048, interpret=INTERPRET):
@@ -95,9 +126,16 @@ def seafl_aggregate_flat(global_flat, stacked_params, stacked_deltas,
     return new_global, p
 
 
+def seafl_aggregate_flat(*args, **kw):
+    """Fused flat-buffer SEAFL aggregation, explicit deltas (see the jitted
+    body) — timed when kernel timing is installed."""
+    return _timed("seafl_aggregate_flat", _seafl_aggregate_flat_jit,
+                  *args, **kw)
+
+
 @partial(jax.jit, static_argnames=("use_importance", "use_staleness",
                                    "block_p", "interpret"))
-def seafl_aggregate_flat_from_params(global_flat, stacked_params,
+def _seafl_aggregate_flat_from_params_jit(global_flat, stacked_params,
                                      data_sizes, staleness,
                                      alpha, mu, beta, theta,
                                      use_importance=True, use_staleness=True,
@@ -121,14 +159,21 @@ def seafl_aggregate_flat_from_params(global_flat, stacked_params,
     return new_global, p
 
 
+def seafl_aggregate_flat_from_params(*args, **kw):
+    """Delta-free fused SEAFL aggregation: the server hot path (see the
+    jitted body) — timed when kernel timing is installed."""
+    return _timed("seafl_aggregate_flat_from_params",
+                  _seafl_aggregate_flat_from_params_jit, *args, **kw)
+
+
 # ---------------------------------------------------------------------------
 # Baseline weight rules on the same engine (paper §VI comparison set).
 # Every algorithm is one fused (1-theta)*g + theta*(w @ buffer) pass.
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("block_p", "interpret"))
-def fedavg_aggregate_flat(global_flat, stacked_params, data_sizes,
-                          block_p=2048, interpret=INTERPRET):
+def _fedavg_aggregate_flat_jit(global_flat, stacked_params, data_sizes,
+                               block_p=2048, interpret=INTERPRET):
     """FedAvg: w_{t+1} = sum_k (n_k/n) w_k  (theta = 1 drops the old global)."""
     n = data_sizes.astype(jnp.float32)
     w = n / jnp.maximum(jnp.sum(n), 1.0)
@@ -138,9 +183,14 @@ def fedavg_aggregate_flat(global_flat, stacked_params, data_sizes,
     return new_global, w
 
 
+def fedavg_aggregate_flat(*args, **kw):
+    return _timed("fedavg_aggregate_flat", _fedavg_aggregate_flat_jit,
+                  *args, **kw)
+
+
 @partial(jax.jit, static_argnames=("block_p", "interpret"))
-def fedbuff_aggregate_flat(global_flat, stacked_params, eta_g,
-                           block_p=2048, interpret=INTERPRET):
+def _fedbuff_aggregate_flat_jit(global_flat, stacked_params, eta_g,
+                                block_p=2048, interpret=INTERPRET):
     """FedBuff, delta-free: w_t + eta_g mean_k(w_k - w_t)
     == (1 - eta_g) w_t + eta_g mean_k w_k  (uniform weights)."""
     K = stacked_params.shape[0]
@@ -151,10 +201,15 @@ def fedbuff_aggregate_flat(global_flat, stacked_params, eta_g,
     return new_global, w
 
 
+def fedbuff_aggregate_flat(*args, **kw):
+    return _timed("fedbuff_aggregate_flat", _fedbuff_aggregate_flat_jit,
+                  *args, **kw)
+
+
 @partial(jax.jit, static_argnames=("block_p", "interpret"))
-def fedasync_aggregate_flat(global_flat, client_flat, staleness,
-                            alpha0=0.6, a=0.5, block_p=2048,
-                            interpret=INTERPRET):
+def _fedasync_aggregate_flat_jit(global_flat, client_flat, staleness,
+                                 alpha0=0.6, a=0.5, block_p=2048,
+                                 interpret=INTERPRET):
     """FedAsync: immediate K=1 mixing at the poly-discounted rate
     alpha_t = alpha0 (1+s)^-a (theta = alpha_t on the same fused pass)."""
     alpha = (jnp.asarray(alpha0, jnp.float32)
@@ -162,3 +217,8 @@ def fedasync_aggregate_flat(global_flat, client_flat, staleness,
     return weighted_aggregate(jnp.ones((1,), jnp.float32), client_flat[None],
                               global_flat, alpha, block_p=block_p,
                               interpret=interpret)
+
+
+def fedasync_aggregate_flat(*args, **kw):
+    return _timed("fedasync_aggregate_flat", _fedasync_aggregate_flat_jit,
+                  *args, **kw)

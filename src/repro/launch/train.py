@@ -17,6 +17,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
 
@@ -46,7 +47,8 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                 uplink_ratio_policy: str = "static",
                 drift_band_edges=(0.8, 1.6),
                 drift_band_ratios=(0.025, 0.05, 0.1),
-                cohorts: str = "off", resync_batching: bool = False):
+                cohorts: str = "off", resync_batching: bool = False,
+                telemetry: bool = False, telemetry_kernels: bool = False):
     cfg = smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg)
     params0 = model.init(jax.random.PRNGKey(seed))
@@ -95,7 +97,8 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                   drift_band_edges=tuple(drift_band_edges),
                   drift_band_ratios=tuple(drift_band_ratios),
                   ingest_batch_chunks=ingest_batch,
-                  cohorts=cohorts, resync_batching=resync_batching)
+                  cohorts=cohorts, resync_batching=resync_batching,
+                  telemetry=telemetry, telemetry_kernels=telemetry_kernels)
     server = SeaflServer(fl, params0, {c.cid: c.n_samples
                                        for c in clients.values()})
 
@@ -110,6 +113,104 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
         return -float(loss_jit(params))
 
     return model, server, clients, eval_fn
+
+
+def round_record(h: dict, wall: float) -> dict:
+    """One structured record per reported round — the JSONL line and the
+    console line are two renderings of this same dict."""
+    rec = {
+        "event": "round",
+        "round": int(h["round"]),
+        "sim_time": float(h["time"]),
+        "heldout_ce": (-float(h["acc"]) if "acc" in h else None),
+        "staleness_max": float(h["staleness_max"]),
+        "wall": float(wall),
+    }
+    if "cohorts" in h:
+        rec["cohorts"] = int(h["cohorts"])
+        rec["edge_partials"] = int(h["edge_partials"])
+    if "telemetry" in h:
+        rec["telemetry"] = h["telemetry"]
+    return rec
+
+
+def format_round(rec: dict) -> str:
+    ce = rec["heldout_ce"]
+    cohort_note = ""
+    if "cohorts" in rec:
+        cohort_note = (f"cohorts={rec['cohorts']} "
+                       f"edge_partials={rec['edge_partials']} ")
+    return (f"[round {rec['round']:3d}] sim_time={rec['sim_time']:8.1f}s "
+            f"heldout_ce={(float('nan') if ce is None else ce):.4f} "
+            f"stale_max={rec['staleness_max']:.0f} "
+            f"{cohort_note}"
+            f"wall={rec['wall']:.0f}s")
+
+
+def summary_record(server, sim) -> dict:
+    rec = {
+        "event": "summary",
+        "rounds": int(server.round),
+        "aggregations": int(server.total_aggregations),
+        "uplink_bytes": int(server.bytes_uploaded),
+        "downlink_bytes": int(server.bytes_downloaded),
+    }
+    disp = server.dispatch
+    if disp is not None:
+        rec["dispatch_full"] = int(disp.full_dispatches)
+        rec["dispatch_delta"] = int(disp.delta_dispatches)
+        rec["encode_cache_hit_rate"] = float(disp.cache_info()["hit_rate"])
+        rec["resyncs"] = int(disp.resync_dispatches)
+    if sim.ratio_log:
+        counts: dict = {}
+        for r in sim.ratio_log:
+            counts[r["ratio"]] = counts.get(r["ratio"], 0) + 1
+        rec["dispatch_ratio_bands"] = {str(k): v
+                                       for k, v in sorted(counts.items())}
+    cs = server.cohort_stats()
+    if cs is not None:
+        rec["cohorts"] = int(cs["cohorts"])
+        rec["edge_merges"] = int(cs["edge_merges_total"])
+    return rec
+
+
+def format_summary(rec: dict) -> str:
+    note = ""
+    if "dispatch_full" in rec:
+        note += (f", dispatch_full={rec['dispatch_full']}"
+                 f", dispatch_delta={rec['dispatch_delta']}"
+                 f", encode_cache_hit_rate={rec['encode_cache_hit_rate']:.2f}"
+                 f", resyncs={rec['resyncs']}")
+    if "dispatch_ratio_bands" in rec:
+        bands = ", ".join(f"{k}: {v}"
+                          for k, v in rec["dispatch_ratio_bands"].items())
+        note += f", dispatch_ratio_bands={{{bands}}}"
+    if "cohorts" in rec:
+        note += (f", cohorts={rec['cohorts']}"
+                 f", edge_merges={rec['edge_merges']}")
+    return (f"[train] done: {rec['rounds']} rounds, "
+            f"{rec['aggregations']} aggregations, "
+            f"uplink_bytes={rec['uplink_bytes']}, "
+            f"downlink_bytes={rec['downlink_bytes']}{note}")
+
+
+class JsonlLog:
+    """Append-mode structured run log (one JSON object per line); a None
+    path makes every call a no-op so call sites stay unconditional."""
+
+    def __init__(self, path=None):
+        self.path = path
+        self._fh = open(path, "a", encoding="utf-8") if path else None
+
+    def write(self, rec: dict):
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+
+    def close(self):
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
 
 
 def main():
@@ -171,7 +272,27 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", action="store_true", default=False,
+                    help="enable the unified telemetry layer "
+                         "(runtime/telemetry.py): counters, staleness/"
+                         "weight histograms, wall + sim-clock spans")
+    ap.add_argument("--telemetry-kernels", action="store_true",
+                    default=False,
+                    help="also time each aggregation kernel call with "
+                         "block_until_ready (measurement-grade runs only: "
+                         "it serializes the XLA stream)")
+    ap.add_argument("--log-jsonl", default=None, metavar="PATH",
+                    help="append one structured JSON record per round plus "
+                         "a final summary record to PATH")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON timeline to "
+                         "PATH at exit (implies --telemetry)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the final telemetry metrics snapshot JSON "
+                         "to PATH at exit (implies --telemetry)")
     args = ap.parse_args()
+    if args.trace or args.metrics:
+        args.telemetry = True
 
     model, server, clients, eval_fn = build_lm_fl(
         args.arch, smoke=args.smoke, n_clients=args.clients,
@@ -191,7 +312,9 @@ def main():
         drift_band_ratios=tuple(
             float(x) for x in args.drift_band_ratios.split(",") if x),
         ingest_batch=args.ingest_batch,
-        cohorts=args.cohorts, resync_batching=args.resync_batching)
+        cohorts=args.cohorts, resync_batching=args.resync_batching,
+        telemetry=args.telemetry,
+        telemetry_kernels=args.telemetry_kernels)
 
     ck = None
     if args.ckpt_dir:
@@ -206,21 +329,21 @@ def main():
                        eval_fn=eval_fn, eval_every=1)
     t0 = time.time()
     last_ck = server.round
+    last_logged = server.round
+    jlog = JsonlLog(args.log_jsonl)
 
     # run in chunks so we can checkpoint between rounds
     while server.round < args.rounds:
         sim.run(max_rounds=min(server.round + args.ckpt_every, args.rounds))
+        wall = time.time() - t0
+        for h in sim.history:
+            if h["round"] > last_logged:
+                jlog.write(round_record(h, wall))
         if sim.history:
-            h = sim.history[-1]
-            cohort_note = ""
-            if "cohorts" in h:
-                cohort_note = (f"cohorts={h['cohorts']} "
-                               f"edge_partials={h['edge_partials']} ")
-            print(f"[round {h['round']:3d}] sim_time={h['time']:8.1f}s "
-                  f"heldout_ce={-h.get('acc', float('nan')):.4f} "
-                  f"stale_max={h['staleness_max']:.0f} "
-                  f"{cohort_note}"
-                  f"wall={time.time() - t0:.0f}s", flush=True)
+            rec = round_record(sim.history[-1], wall)
+            if sim.history[-1]["round"] > last_logged:
+                last_logged = sim.history[-1]["round"]
+            print(format_round(rec), flush=True)
         if ck is not None and server.round > last_ck:
             ck.save(server.round, server.checkpoint_trees(),
                     extra=server.state_dict())
@@ -229,26 +352,17 @@ def main():
             break
     if ck is not None:
         ck.wait()   # the last async save must land before the process exits
-    disp = server.dispatch
-    disp_note = "" if disp is None else (
-        f", dispatch_full={disp.full_dispatches}"
-        f", dispatch_delta={disp.delta_dispatches}"
-        f", encode_cache_hit_rate={disp.cache_info()['hit_rate']:.2f}"
-        f", resyncs={disp.resync_dispatches}")
-    if sim.ratio_log:
-        counts: dict = {}
-        for r in sim.ratio_log:
-            counts[r["ratio"]] = counts.get(r["ratio"], 0) + 1
-        bands = ", ".join(f"{k}: {v}" for k, v in sorted(counts.items()))
-        disp_note += f", dispatch_ratio_bands={{{bands}}}"
-    cs = server.cohort_stats()
-    if cs is not None:
-        disp_note += (f", cohorts={cs['cohorts']}"
-                      f", edge_merges={cs['edge_merges_total']}")
-    print(f"[train] done: {server.round} rounds, "
-          f"{server.total_aggregations} aggregations, "
-          f"uplink_bytes={server.bytes_uploaded}, "
-          f"downlink_bytes={server.bytes_downloaded}{disp_note}")
+    summary = summary_record(server, sim)
+    jlog.write(summary)
+    jlog.close()
+    if args.trace:
+        server.tel.export_chrome_trace(args.trace)
+        print(f"[train] wrote Perfetto trace to {args.trace}")
+    if args.metrics:
+        with open(args.metrics, "w", encoding="utf-8") as fh:
+            json.dump(server.tel.snapshot(), fh, indent=1)
+        print(f"[train] wrote metrics snapshot to {args.metrics}")
+    print(format_summary(summary))
 
 
 if __name__ == "__main__":

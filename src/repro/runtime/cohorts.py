@@ -57,6 +57,7 @@ import jax.numpy as jnp
 from repro.runtime.codecs import Chunk, WireFormat
 from repro.runtime.dispatch import DispatchPayload, DispatchSession
 from repro.runtime.policy import needs_resync
+from repro.runtime.telemetry import Telemetry, of as _tel_of
 from repro.sharding import shard_cohort_state
 
 __all__ = [
@@ -86,7 +87,8 @@ class CohortTable:
                     cohort's residual with a later one under the same key.
     """
 
-    def __init__(self):
+    def __init__(self, telemetry: Optional[Telemetry] = None):
+        self.tel = _tel_of(telemetry)
         self.member: dict[int, tuple] = {}
         self.mismatch: dict[int, float] = {}
         self._residual: dict[tuple, jnp.ndarray] = {}
@@ -148,6 +150,7 @@ class CohortTable:
                 self._gen[dst] = self._gen.get(dst, 0) + 1
                 self.residual_writes += 1
             self.cohort_births += 1
+            self.tel.counter("cohort.births")
         elif implied is not None:
             # joining a live cohort: the member inherits the stored
             # residual; the gap to its own implied one becomes a scalar
@@ -155,6 +158,8 @@ class CohortTable:
             pen = self._join_penalty(hop, src, dst, implied)
             if pen > 0.0:
                 self.mismatch[cid] = self.mismatch.get(cid, 0.0) + pen
+                self.tel.histogram("cohort.mismatch_bound",
+                                   self.mismatch[cid])
         if src != dst:
             self._count[dst] = self._count.get(dst, 0) + 1
             self.member[cid] = dst
@@ -277,7 +282,8 @@ class CohortDispatchSession(DispatchSession):
     def __init__(self, fmt: WireFormat, history: int,
                  table: Optional[CohortTable] = None, **kw):
         super().__init__(fmt, history, **kw)
-        self.table = table if table is not None else CohortTable()
+        self.table = (table if table is not None
+                      else CohortTable(telemetry=self.tel))
         # (src key, src gen, target, scheme, ratio, chunk_elems) ->
         #     (chunks, err, nbytes): one fold encode serves every cohort
         # member on the hop (their fold vec is identical by construction)
@@ -300,6 +306,8 @@ class CohortDispatchSession(DispatchSession):
             self.table.move(
                 cid, (payload.target_version, payload.ratio, KIND_EXACT),
                 implied=None, hop=payload.hop, reset=True)
+            self.tel.gauge("cohort.count", self.table.n_cohorts())
+            self.tel.gauge("cohort.members", self.table.n_members())
             return
         dst = (payload.target_version, payload.ratio, KIND_DELTA)
         if payload.shared:
@@ -315,6 +323,8 @@ class CohortDispatchSession(DispatchSession):
             def implied():
                 return payload.residual
         self.table.move(cid, dst, implied=implied, hop=payload.hop)
+        self.tel.gauge("cohort.count", self.table.n_cohorts())
+        self.tel.gauge("cohort.members", self.table.n_members())
 
     def drop(self, cid: int) -> None:
         super().drop(cid)
@@ -354,6 +364,7 @@ class CohortDispatchSession(DispatchSession):
                     self.versions.pop(cid, None)
                     self.table.remove(cid)
                     self.mismatch_resyncs += 1
+                    self.tel.counter("cohort.mismatch_resync")
         return super().encode(cid, target, ring, materialize=materialize,
                               ratio=ratio, _folds=_folds)
 
@@ -377,6 +388,7 @@ class CohortDispatchSession(DispatchSession):
                 # hop delta + shared residual, so the encode fans out
                 chunks, err, nbytes = ent
                 self.fold_hits += 1
+                self.tel.counter("cohort.fold_hit")
                 return DispatchPayload(
                     cid=cid, target_version=target, base_version=held,
                     scheme=fmt.scheme, param_size=int(g.shape[0]),
@@ -386,6 +398,7 @@ class CohortDispatchSession(DispatchSession):
                     ratio=wire_ratio, encode_cost_bytes=0,
                     hop=("fold",) + fk)
             self.fold_misses += 1
+            self.tel.counter("cohort.fold_miss")
         return super()._encode_personalized(cid, target, held, fmt, g,
                                             ring, delta, r, wire_ratio,
                                             folds)

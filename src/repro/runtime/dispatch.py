@@ -86,6 +86,7 @@ from repro.runtime.codecs import (
     encode_flat, encode_flat_batch,
 )
 from repro.runtime.policy import needs_resync
+from repro.runtime.telemetry import Telemetry, of as _tel_of
 
 __all__ = [
     "DispatchPayload",
@@ -196,7 +197,9 @@ class DispatchSession:
 
     def __init__(self, fmt: WireFormat, history: int,
                  multicast: bool = True, resync: float = 4.0,
-                 use_cache: bool = True, resync_mode: str = "norm"):
+                 use_cache: bool = True, resync_mode: str = "norm",
+                 telemetry: Optional[Telemetry] = None):
+        self.tel = _tel_of(telemetry)
         self.fmt = fmt
         self.history = max(1, int(history))
         self.multicast = bool(multicast)
@@ -215,6 +218,14 @@ class DispatchSession:
         self._cache: dict[tuple, tuple] = {}
         self.cache_hits = 0
         self.cache_misses = 0
+
+    def _cache_hit(self) -> None:
+        self.cache_hits += 1
+        self.tel.counter("dispatch.cache_hit")
+
+    def _cache_miss(self) -> None:
+        self.cache_misses += 1
+        self.tel.counter("dispatch.cache_miss")
 
     # ------------------------------------------------------ tracking hooks
     # Per-client tracking state is reached only through these narrow
@@ -336,7 +347,7 @@ class DispatchSession:
                         threshold=self.resync, fmt=fmt, param_size=p)
                 if not resync_now:
                     if ent is not None:
-                        self.cache_hits += 1
+                        self._cache_hit()
                         chunks, err, nbytes, _ = ent
                         cost = 0
                     else:
@@ -349,7 +360,7 @@ class DispatchSession:
                             self._cache[key] = (
                                 chunks, err, nbytes,
                                 float(jnp.linalg.norm(delta)) if p else 0.0)
-                        self.cache_misses += 1
+                        self._cache_miss()
                         cost = 4 * p
                     return DispatchPayload(
                         cid=cid, target_version=target, base_version=held,
@@ -375,7 +386,7 @@ class DispatchSession:
             # a sentinel (chunk-less) entry satisfies lazy requests; a
             # materialized request needs real chunks and upgrades it
             if ent is not None and (not materialize or ent[0] is not None):
-                self.cache_hits += 1
+                self._cache_hit()
                 return DispatchPayload(
                     cid=cid, target_version=target, base_version=None,
                     scheme=full_fmt.scheme, param_size=p,
@@ -386,7 +397,7 @@ class DispatchSession:
                       else closed_form)
             if self.use_cache:
                 self._cache[key] = (chunks, None, nbytes, None)
-            self.cache_misses += 1
+            self._cache_miss()
             return DispatchPayload(
                 cid=cid, target_version=target, base_version=None,
                 scheme=full_fmt.scheme, param_size=p, chunks=chunks,
@@ -523,10 +534,14 @@ class DispatchSession:
         full/delta counters (payloads that die on the wire count nothing)."""
         if payload.full:
             self.full_dispatches += 1
+            self.tel.counter("dispatch.full")
         else:
             self.delta_dispatches += 1
+            self.tel.counter("dispatch.delta")
             if payload.resync:
                 self.resync_dispatches += 1
+                self.tel.counter("dispatch.resync")
+        self.tel.histogram("dispatch.payload_bytes", payload.nbytes)
         self._commit_tracking(payload)
 
     def _commit_tracking(self, payload: DispatchPayload) -> None:

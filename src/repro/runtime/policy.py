@@ -119,13 +119,23 @@ class RatePolicy:
         """Band index of a normalised drift observation."""
         return bisect_right(self.edges, float(x))
 
-    def ratio_for(self, x: Optional[float]) -> Optional[float]:
+    def ratio_for(self, x: Optional[float],
+                  telemetry=None) -> Optional[float]:
         """Chosen ratio for normalised drift ``x`` (None when the policy is
         static or nothing has been observed yet — caller keeps its static
-        ratio)."""
+        ratio).  ``telemetry`` (a :class:`~repro.runtime.telemetry.Telemetry`)
+        records band occupancy and the chosen ratio; the policy itself is
+        frozen, so observability happens at the decision point."""
         if not self.active or x is None:
             return None
-        return self.ratios[self.band(x)]
+        b = self.band(x)
+        r = self.ratios[b]
+        if telemetry is not None:
+            telemetry.counter("policy.band", band=b)
+            telemetry.gauge("policy.ratio", r)
+            telemetry.gauge("policy.drift_x", x)
+            telemetry.histogram("policy.drift_x_hist", x)
+        return r
 
 
 class DriftTracker:

@@ -97,6 +97,7 @@ class InFlight:
     notified: bool = False
     payload: Any = None           # DispatchPayload on the downlink wire
     arrive_event: Optional[_Event] = None   # payload delivery at t0
+    sched: float = 0.0            # dispatch scheduled (encode + wire start)
 
 
 class FLSimulation:
@@ -109,6 +110,10 @@ class FLSimulation:
         self.cfg = sim_cfg
         self.eval_fn = eval_fn
         self.eval_every = eval_every
+        # the server's registry is the simulation's too: client lifecycle
+        # events become spans on the *simulated* clock (one track per
+        # client), next to the server's wall-clock compute spans
+        self.tel = server.tel
         self._rng = np.random.default_rng(sim_cfg.seed)
         self._heap: list[_Event] = []
         self._seq = itertools.count()
@@ -249,7 +254,7 @@ class FLSimulation:
         self._inflight[cid] = InFlight(
             cid=cid, version=self.server.round, epoch_ends=ends,
             upload_event=ev, n_epochs_at_upload=E, t0=t0, payload=payload,
-            arrive_event=arrive)
+            arrive_event=arrive, sched=self.now)
 
     def _notify(self, cid: int):
         """Server NOTIFY (SEAFL², Algorithm 2): arrives after down link."""
@@ -268,6 +273,8 @@ class FLSimulation:
         fl.upload_event.valid = False
         fl.n_epochs_at_upload = max(1, len(done) + 1)
         fl.upload_event = self._push(nxt, "upload", cid=cid)
+        self.tel.sim_instant("notify", self.now, track=f"client{cid}",
+                             epochs=fl.n_epochs_at_upload)
 
     # ------------------------------------------------------------ upload
     def _handle_upload(self, cid: int):
@@ -285,10 +292,13 @@ class FLSimulation:
         w, loss = client.local_train(base, fl.n_epochs_at_upload,
                                      self.server.cfg.local_lr)
         payload = self.server.encode_update(cid, w, fl.n_epochs_at_upload)
+        self.tel.sim_span("train", fl.t0, self.now, track=f"client{cid}",
+                          epochs=fl.n_epochs_at_upload, version=fl.version,
+                          notified=fl.notified)
         up_time = self._up_time(cid, payload.nbytes)
         self._delivering[cid] = self._push(
             self.now + up_time, "deliver", cid=cid, payload=payload,
-            loss=loss)
+            loss=loss, up_t0=self.now)
         # Under the bandwidth model slow transfers can dominate a client's
         # lifetime, so they must be organically crashable too: the dispatch
         # draw covered the training window at full fail_prob; allocate the
@@ -304,15 +314,23 @@ class FLSimulation:
                 self._push(self.now + self._rng.uniform(0, up_time),
                            "fail", cid=cid)
 
-    def _handle_deliver(self, cid: int, payload, loss: float):
+    def _handle_deliver(self, cid: int, payload, loss: float,
+                        up_t0: Optional[float] = None):
         """The last wire chunk landed: the server ingests the payload into
         its (K, P) buffer slot and may aggregate."""
         self._delivering.pop(cid, None)
+        if up_t0 is not None:
+            self.tel.sim_span("upload", up_t0, self.now,
+                              track=f"client{cid}", bytes=payload.nbytes,
+                              version=payload.version,
+                              epochs=payload.n_epochs)
         agg = self.server.ingest_payload(payload, recv_time=self.now)
         if agg is not None:
             self._on_aggregation(agg, loss)
 
     def _on_aggregation(self, agg, last_loss: float):
+        self.tel.sim_instant("aggregate", self.now, track="server",
+                             round=agg.round, k=len(agg.contributors))
         rec = {"time": self.now, "round": agg.round,
                "staleness_mean": float(np.mean(agg.staleness)),
                "staleness_max": float(np.max(agg.staleness)),
@@ -327,6 +345,11 @@ class FLSimulation:
             rec["edge_partials"] = cs["edge_partials"]
         if self.eval_fn is not None and (agg.round % self.eval_every == 0):
             rec["acc"] = float(self.eval_fn(self.server.params))
+        if self.tel.enabled:
+            # rolling metrics snapshot rides with the round record (compact:
+            # histogram summaries only) — history keys are unchanged when
+            # telemetry is off, which the bit-identity test pins
+            rec["telemetry"] = self.tel.snapshot(compact=True)
         self.history.append(rec)
         for cid in agg.notify:
             self._notify(cid)
@@ -382,9 +405,15 @@ class FLSimulation:
                 fl = self._inflight.get(ev.data["cid"])
                 if fl is not None and fl.payload is not None:
                     self.server.deliver_dispatch(fl.cid, fl.payload)
+                    self.tel.sim_span(
+                        "dispatch", fl.sched, self.now,
+                        track=f"client{fl.cid}", bytes=fl.payload.nbytes,
+                        version=fl.payload.target_version,
+                        scheme=fl.payload.scheme)
             elif ev.kind == "deliver":
                 self._handle_deliver(ev.data["cid"], ev.data["payload"],
-                                     ev.data["loss"])
+                                     ev.data["loss"],
+                                     ev.data.get("up_t0"))
             elif ev.kind == "notify":
                 self._handle_notify(ev.data["cid"])
             elif ev.kind == "fail":
@@ -398,6 +427,8 @@ class FLSimulation:
                 if deliver is not None:
                     deliver.valid = False
                 if fl is not None or deliver is not None:
+                    self.tel.sim_instant("crash", self.now,
+                                         track=f"client{cid}")
                     if fl is not None:
                         fl.upload_event.valid = False
                         # a crash inside the dispatch window kills the
@@ -419,9 +450,14 @@ class FLSimulation:
 
     # ------------------------------------------------------------ metrics
     def time_to_accuracy(self, target: float) -> Optional[float]:
+        """Simulated seconds when ``target`` accuracy was first reached, or
+        None if it never was (a ``target_not_reached`` gauge records the
+        miss so benchmark sweeps can audit silent Nones)."""
         for h in self.history:
             if h.get("acc", 0.0) >= target:
                 return h["time"]
+        self.tel.gauge("sim.target_not_reached", 1.0, metric="time",
+                       target=target)
         return None
 
     def bytes_to_accuracy(self, target: float,
@@ -438,4 +474,6 @@ class FLSimulation:
                 up, down = h["bytes"], h.get("bytes_down", 0)
                 return {"up": up, "down": down,
                         "total": up + down}[direction]
+        self.tel.gauge("sim.target_not_reached", 1.0, metric="bytes",
+                       direction=direction, target=target)
         return None

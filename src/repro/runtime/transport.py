@@ -37,6 +37,7 @@ from repro.runtime.codecs import (
     WireFormat, decode_chunk, decode_concat, encode_chunk, encode_flat,
     make_wire_format, parse_spec,
 )
+from repro.runtime.telemetry import Telemetry, of as _tel_of
 
 __all__ = [
     "CHUNK_HEADER_BYTES",
@@ -184,7 +185,9 @@ class IngestBatcher:
     """
 
     def __init__(self, buffer, flush_chunks: int = 16,
-                 auto_bypass: bool = False):
+                 auto_bypass: bool = False,
+                 telemetry: Optional[Telemetry] = None):
+        self.tel = _tel_of(telemetry)
         self.buffer = buffer
         self.flush_chunks = max(1, int(flush_chunks))
         self.auto_bypass = bool(auto_bypass)
@@ -205,6 +208,8 @@ class IngestBatcher:
                 self._bypass = _coalescing_loses(
                     int(vals.shape[0]), self.buffer.dtype,
                     self.flush_chunks)
+                self.tel.gauge("ingest.bypass_verdict",
+                               1.0 if self._bypass else 0.0)
             if self._bypass:
                 # eager pass-through: coalescing loses at this chunk shape
                 # (probe verdict), so the write lands immediately.  Order
@@ -213,6 +218,7 @@ class IngestBatcher:
                 # are disjoint in-order windows.
                 self.buffer.write_range(slot, start, vals)
                 self.chunks_bypassed += 1
+                self.tel.counter("ingest.chunks_bypassed")
                 return
         self._fill.append((slot, start, vals))
         if len(self._fill) >= self.flush_chunks:
@@ -235,6 +241,8 @@ class IngestBatcher:
             self.writes_issued += 1
         self.flushes += 1
         self.chunks_batched += len(batch)
+        self.tel.counter("ingest.flushes")
+        self.tel.histogram("ingest.flush_chunks", len(batch))
 
 
 class IngestSession:
