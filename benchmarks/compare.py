@@ -160,6 +160,62 @@ def _gate_observability(fname: str, data: dict, rows: list,
                  None, "ok" if ok else "REGRESSED"))
 
 
+def _gate_monitor(fname: str, data: dict, rows: list,
+                  failures: list) -> None:
+    """Gate the run-health monitor's cost and its healthy-run silence.
+
+    Two *within-report* invariants, `_gate_observability` discipline:
+
+    * each wire bench times its telemetry-on hot path with and without one
+      ``RunMonitor.on_round`` per iteration; the slowdown must stay under
+      ``OBS_OVERHEAD_MAX_PCT`` — the detectors are O(window) scalar work
+      per round and must stay that way;
+    * ``benchmarks/trace_smoke.py``'s healthy fleet (written to
+      ``MONITOR_smoke.json`` by the tier-1 smoke run) must produce zero
+      alerts — a detector that fires on a known-good run is miscalibrated
+      and would teach people to ignore alerts.  Skipped with status "new"
+      when the smoke artifact is absent (bench-only local runs).
+    """
+    tag = f"{fname.removeprefix('BENCH_').removesuffix('.json')}" \
+          f"/monitor_overhead_pct"
+    sec = data.get("monitor")
+    if not sec:
+        failures.append(f"{tag}: monitor section missing from the current "
+                        f"report (did the bench change?)")
+        return
+    pct = sec.get("overhead_pct")
+    if pct is None:
+        failures.append(f"{tag}: overhead_pct missing")
+        return
+    ok = pct <= OBS_OVERHEAD_MAX_PCT
+    if not ok:
+        failures.append(
+            f"{tag}: monitor-on costs {pct:+.1f}% on {sec.get('path')} "
+            f"(> +{OBS_OVERHEAD_MAX_PCT:.0f}% gate) — the run monitor is "
+            f"no longer cheap enough to leave on")
+    rows.append((f"{tag}(<= {OBS_OVERHEAD_MAX_PCT:.0f}%)", None, float(pct),
+                 None, "ok" if ok else "REGRESSED"))
+
+
+def _gate_monitor_smoke(rows: list, failures: list) -> None:
+    smoke_path = os.path.join(BENCH_DIR, "MONITOR_smoke.json")
+    if not os.path.exists(smoke_path):
+        rows.append(("monitor/smoke_alerts_total(==0)", None, None, None,
+                     "new"))
+        return
+    smoke = _load(smoke_path)
+    total = smoke.get("alerts_total")
+    ok = total == 0
+    if not ok:
+        failures.append(
+            f"monitor/smoke: trace_smoke's healthy run raised {total} "
+            f"alerts ({smoke.get('alerts_by_detector')}) — detector "
+            f"defaults are miscalibrated for a known-good fleet")
+    rows.append(("monitor/smoke_alerts_total(==0)", None,
+                 float(total if total is not None else -1), None,
+                 "ok" if ok else "REGRESSED"))
+
+
 def _gate_fleet(data: dict, base: dict, rows: list, failures: list) -> None:
     """Gate the fleet-size sweep (BENCH_fleet.json).
 
@@ -247,6 +303,7 @@ def compare(threshold: float = THRESHOLD) -> tuple[list[tuple], list[str]]:
             _gate_adaptive_ratio(cur_data, rows, failures)
         if fname in ("BENCH_ingest.json", "BENCH_dispatch.json"):
             _gate_observability(fname, cur_data, rows, failures)
+            _gate_monitor(fname, cur_data, rows, failures)
         if fname == "BENCH_fleet.json":
             _gate_fleet(cur_data, base_data, rows, failures)
         for metric in sorted(set(base_g) | set(cur_g)):
@@ -274,6 +331,7 @@ def compare(threshold: float = THRESHOLD) -> tuple[list[tuple], list[str]]:
             b, c = base_i.get(metric), cur_i.get(metric)
             delta = ((c - b) / b) if (b and c is not None) else None
             rows.append((tag, b, c, delta, "info"))
+    _gate_monitor_smoke(rows, failures)
     return rows, failures
 
 

@@ -388,6 +388,41 @@ def bench_ingest():
                          f"pct_on_stream_batched_{spec};off={dt_off:.4f}s;"
                          f"on={dt_on:.4f}s;gate=<5pct_in_compare.py"))
 
+            # run-monitor overhead on the same hot path: baseline is the
+            # telemetry-on stream (the monitor implies telemetry), the
+            # treatment adds one RunMonitor.on_round per iteration with a
+            # record that carries no snapshot — so the detectors pull the
+            # compact snapshot from the live registry themselves, the real
+            # per-round cost.  Same <5% within-report gate in compare.py.
+            from repro.runtime.monitor import RunMonitor
+            mon = RunMonitor(tel)
+            mon_round = [0]
+
+            def run_stream_monitored():
+                run_stream(tel)
+                mon_round[0] += 1
+                mon.on_round({"round": mon_round[0],
+                              "time": float(mon_round[0]),
+                              "acc": 0.5 + 0.01 * mon_round[0],
+                              "staleness_max": 1.0,
+                              "bytes": 1000 * mon_round[0],
+                              "bytes_down": 1000 * mon_round[0]})
+
+            m_overhead, m_off, m_on = _ab_overhead(
+                lambda: run_stream(tel), run_stream_monitored)
+            report["monitor"] = {
+                "path": f"stream_batched/{spec}+on_round",
+                "seconds_off": round(m_off, 6),
+                "seconds_on": round(m_on, 6),
+                "overhead_pct": round(m_overhead * 100, 2),
+                "rounds_observed": int(mon_round[0]),
+                "alerts": len(mon.alerts),
+            }
+            rows.append(("ingest/monitor_overhead",
+                         f"{m_overhead * 100:.1f}",
+                         f"pct_on_telemetry_on_stream;off={m_off:.4f}s;"
+                         f"on={m_on:.4f}s;gate=<5pct_in_compare.py"))
+
     # bf16 buffer mode: HBM halves, aggregation parity stays <= 1e-2
     sizes = jnp.ones(K)
     stale = jnp.zeros(K)
@@ -551,6 +586,37 @@ def bench_dispatch():
     rows.append(("dispatch/telemetry_overhead", f"{overhead * 100:.1f}",
                  f"pct_on_encode_cache_fanout;off={dt_off:.4f}s;"
                  f"on={dt_on:.4f}s;gate=<5pct_in_compare.py"))
+
+    # run-monitor overhead over the telemetry-on fan-out: one
+    # RunMonitor.on_round per fan-out round, detectors pulling the compact
+    # snapshot from the live registry (see the ingest-side twin for the
+    # measurement rationale; compare.py gates both at <5%)
+    from repro.runtime.monitor import RunMonitor
+    mon = RunMonitor(tel_obs)
+    mon_round = [0]
+
+    def fanout_monitored():
+        encode_all(sess_on)
+        mon_round[0] += 1
+        mon.on_round({"round": mon_round[0], "time": float(mon_round[0]),
+                      "acc": 0.5 + 0.01 * mon_round[0],
+                      "staleness_max": 1.0,
+                      "bytes": 1000 * mon_round[0],
+                      "bytes_down": 1000 * mon_round[0]})
+
+    m_overhead, m_off, m_on = _ab_overhead(
+        lambda: encode_all(sess_on), fanout_monitored)
+    report["monitor"] = {
+        "path": "encode_cache_fanout/topk:0.1+on_round",
+        "seconds_off": round(m_off, 6),
+        "seconds_on": round(m_on, 6),
+        "overhead_pct": round(m_overhead * 100, 2),
+        "rounds_observed": int(mon_round[0]),
+        "alerts": len(mon.alerts),
+    }
+    rows.append(("dispatch/monitor_overhead", f"{m_overhead * 100:.1f}",
+                 f"pct_on_telemetry_on_fanout;off={m_off:.4f}s;"
+                 f"on={m_on:.4f}s;gate=<5pct_in_compare.py"))
 
     # resync batching, kernel level: a round where every delta receiver
     # trips the resync threshold (resync=0 forces it) — per-client

@@ -1,11 +1,15 @@
-"""Telemetry smoke artifact: run a tiny telemetry-on fleet and export the
-Perfetto trace + metrics snapshot.
+"""Telemetry + run-health smoke artifact: run a tiny monitor-on fleet and
+export the Perfetto trace, metrics snapshot, JSONL run log, and HTML run
+report.
 
-CI's tier-1 job runs this after the test suite and uploads the two JSON
-files as a build artifact, so every PR carries an openable timeline
-(ui.perfetto.dev) of the simulated fleet it shipped: per-client
-dispatch/train/upload spans on the simulated clock, server aggregate spans
-on the wall clock, and the full staleness/weight/byte histograms.
+CI's tier-1 job runs this after the test suite and uploads the files as a
+build artifact, so every PR carries an openable timeline (ui.perfetto.dev)
+of the simulated fleet it shipped — per-client dispatch/train/upload spans
+on the simulated clock, server aggregate spans on the wall clock, the full
+staleness/weight/byte histograms — plus the self-contained run report the
+run monitor renders from the same log.  The run is healthy by
+construction, so MONITOR_smoke.json must report zero alerts
+(benchmarks/compare.py gates on it).
 
 Usage::
 
@@ -21,13 +25,15 @@ import os
 def run(out_dir: str) -> dict:
     from repro.core.server import FLConfig
     from repro.experiment import ExperimentConfig, run_experiment
+    from repro.launch.train import JsonlLog, round_record, summary_record
+    from repro.launch.report import generate, load_run
     from repro.runtime.simulator import SimConfig
 
     fl = FLConfig(algorithm="seafl", n_clients=12, concurrency=6,
                   buffer_size=3, staleness_limit=4, local_epochs=2,
                   local_lr=0.05, batch_size=16, seed=3,
                   dispatch_compression="topk:0.1", dispatch_history=8,
-                  telemetry=True)
+                  telemetry=True, monitor="on")
     cfg = ExperimentConfig(dataset="tiny", n_train=600, n_test=120,
                            model="mlp", fl=fl,
                            sim=SimConfig(speed_model="pareto", seed=3),
@@ -38,10 +44,24 @@ def run(out_dir: str) -> dict:
     os.makedirs(out_dir, exist_ok=True)
     trace_path = os.path.join(out_dir, "trace_smoke.json")
     metrics_path = os.path.join(out_dir, "metrics_smoke.json")
+    log_path = os.path.join(out_dir, "smoke_run.jsonl")
+    report_path = os.path.join(out_dir, "run_report.html")
+    monitor_path = os.path.join(out_dir, "MONITOR_smoke.json")
     trace = tel.export_chrome_trace(trace_path)
     snap = tel.snapshot()
     with open(metrics_path, "w") as f:
         json.dump(snap, f, indent=1)
+
+    # the same per-round records train.py streams, then the report over
+    # them — CI uploads the rendered HTML as its run-health artifact
+    if os.path.exists(log_path):
+        os.remove(log_path)      # JsonlLog appends; the artifact is one run
+    jlog = JsonlLog(log_path)
+    for h in hist:
+        jlog.write(round_record(h, 0.0))
+    jlog.write(summary_record(sim.server, sim), fsync=True)
+    jlog.close()
+    doc = generate(log_path, report_path, trace=trace_path)
 
     # sanity: the artifact must actually contain a fleet timeline and a
     # staleness histogram consistent with the run's history
@@ -52,11 +72,27 @@ def run(out_dir: str) -> dict:
     st = snap["histograms"]["agg.staleness"]
     assert st["max"] == max(h["staleness_max"] for h in hist), \
         "staleness histogram disagrees with run history"
+    assert "</html>" in doc and "run-monitor alerts" in doc, \
+        "run report is not a complete HTML document"
+    assert len(load_run(log_path)["rounds"]) == len(hist), \
+        "JSONL log disagrees with run history"
+
+    # run-health gate input: this fleet is healthy by construction, so the
+    # monitor must stay silent; compare.py fails the build otherwise
+    mon = sim.server.monitor.summary()
+    mon["rounds"] = len(hist)
+    with open(monitor_path, "w") as f:
+        json.dump(mon, f, indent=1)
+
     print(f"[trace_smoke] {len(sim_spans)} spans, "
           f"{len(snap['counters'])} counters, "
-          f"staleness max={st['max']:.0f} over {st['count']} updates")
-    print(f"[trace_smoke] wrote {trace_path} and {metrics_path}")
-    return {"trace": trace_path, "metrics": metrics_path}
+          f"staleness max={st['max']:.0f} over {st['count']} updates, "
+          f"{mon['alerts_total']} alerts")
+    print(f"[trace_smoke] wrote {trace_path}, {metrics_path}, "
+          f"{log_path}, {report_path}, {monitor_path}")
+    return {"trace": trace_path, "metrics": metrics_path,
+            "log": log_path, "report": report_path,
+            "monitor": monitor_path}
 
 
 def main() -> None:

@@ -42,6 +42,7 @@ from repro.core.aggregation import SeaflHyper
 from repro.core.buffer import Update, UpdateBuffer
 from repro.runtime.cohorts import CohortDispatchSession
 from repro.runtime.dispatch import DispatchPayload, DispatchSession
+from repro.runtime.monitor import RunMonitor
 from repro.runtime.policy import DriftTracker, RatePolicy, RESYNC_MODES
 from repro.runtime.telemetry import Telemetry
 from repro.runtime.transport import (
@@ -139,6 +140,21 @@ class FLConfig:
     # opt-in kernel wall timings: block_until_ready around each seafl_agg
     # aggregate call (changes device-dispatch overlap, never values)
     telemetry_kernels: bool = False
+    # run-health monitor (runtime/monitor.py): 'on' runs the online
+    # anomaly detectors (plateau, staleness blowup, straggler dominance,
+    # resync storms, ...) against every round record and attaches typed
+    # alerts to it.  Implies telemetry.  'off' (default) is bit-identical
+    # to the monitor-free stack — same RNG stream, wire bytes, and
+    # history keys (pinned in tests/test_monitor.py).
+    monitor: str = "off"
+    # fail-fast SLO: comma-separated severities ('warn'|'error') and/or
+    # detector names; any matching alert breaches the SLO, the simulator
+    # stops at the next round boundary, and launch/train.py exits
+    # nonzero.  None disables the gate (alerts still record).
+    slo: Optional[str] = None
+    # hard budget on cumulative up+down wire bytes for the byte_budget
+    # detector (None = unlimited)
+    monitor_byte_budget: Optional[int] = None
     seed: int = 0
 
     def hyper(self) -> SeaflHyper:
@@ -169,8 +185,20 @@ class SeaflServer:
             raise ValueError(f"buffer_dtype must be one of "
                              f"{sorted(BUFFER_DTYPES)}, got {cfg.buffer_dtype}")
         self.cfg = cfg
+        if cfg.monitor not in ("off", "on"):
+            raise ValueError(f"monitor must be 'off' or 'on', got "
+                             f"{cfg.monitor!r}")
+        # the monitor consumes telemetry (compact snapshots, sim-track
+        # busy time), so monitor='on' implies an enabled registry even
+        # when cfg.telemetry is False
         self.tel = (telemetry if telemetry is not None
-                    else Telemetry(enabled=cfg.telemetry))
+                    else Telemetry(enabled=cfg.telemetry
+                                   or cfg.monitor == "on"))
+        # built eagerly so a bad SLO spec fails at construction, not
+        # mid-run; never checkpointed (detectors restart cold on resume)
+        self.monitor: Optional[RunMonitor] = (
+            RunMonitor.from_config(cfg, self.tel)
+            if cfg.monitor == "on" else None)
         self.packer = ParamPacker(params)
         self._flat = self.packer.pack(params)          # current global, (P,)
         self.round = 0

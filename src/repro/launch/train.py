@@ -48,7 +48,8 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                 drift_band_edges=(0.8, 1.6),
                 drift_band_ratios=(0.025, 0.05, 0.1),
                 cohorts: str = "off", resync_batching: bool = False,
-                telemetry: bool = False, telemetry_kernels: bool = False):
+                telemetry: bool = False, telemetry_kernels: bool = False,
+                monitor: str = "off", slo=None, monitor_byte_budget=None):
     cfg = smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg)
     params0 = model.init(jax.random.PRNGKey(seed))
@@ -98,7 +99,9 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                   drift_band_ratios=tuple(drift_band_ratios),
                   ingest_batch_chunks=ingest_batch,
                   cohorts=cohorts, resync_batching=resync_batching,
-                  telemetry=telemetry, telemetry_kernels=telemetry_kernels)
+                  telemetry=telemetry, telemetry_kernels=telemetry_kernels,
+                  monitor=monitor, slo=slo,
+                  monitor_byte_budget=monitor_byte_budget)
     server = SeaflServer(fl, params0, {c.cid: c.n_samples
                                        for c in clients.values()})
 
@@ -126,11 +129,21 @@ def round_record(h: dict, wall: float) -> dict:
         "staleness_max": float(h["staleness_max"]),
         "wall": float(wall),
     }
+    if "bytes" in h:
+        rec["uplink_bytes"] = int(h["bytes"])
+        rec["downlink_bytes"] = int(h.get("bytes_down", 0))
     if "cohorts" in h:
         rec["cohorts"] = int(h["cohorts"])
         rec["edge_partials"] = int(h["edge_partials"])
     if "telemetry" in h:
         rec["telemetry"] = h["telemetry"]
+    # run-monitor passthrough: memory watchdog + typed alerts ride both the
+    # JSONL line and (alerts) the console line
+    for k, v in h.items():
+        if k.startswith("mem_"):
+            rec[k] = v
+    if "alerts" in h:
+        rec["alerts"] = h["alerts"]
     return rec
 
 
@@ -140,11 +153,17 @@ def format_round(rec: dict) -> str:
     if "cohorts" in rec:
         cohort_note = (f"cohorts={rec['cohorts']} "
                        f"edge_partials={rec['edge_partials']} ")
+    alert_note = ""
+    if rec.get("alerts"):
+        names = ",".join(a["detector"] for a in rec["alerts"])
+        sev = max((a["severity"] for a in rec["alerts"]),
+                  key=lambda s: ("info", "warn", "error").index(s))
+        alert_note = f" ALERT[{sev}:{names}]"
     return (f"[round {rec['round']:3d}] sim_time={rec['sim_time']:8.1f}s "
             f"heldout_ce={(float('nan') if ce is None else ce):.4f} "
             f"stale_max={rec['staleness_max']:.0f} "
             f"{cohort_note}"
-            f"wall={rec['wall']:.0f}s")
+            f"wall={rec['wall']:.0f}s{alert_note}")
 
 
 def summary_record(server, sim) -> dict:
@@ -171,6 +190,8 @@ def summary_record(server, sim) -> dict:
     if cs is not None:
         rec["cohorts"] = int(cs["cohorts"])
         rec["edge_merges"] = int(cs["edge_merges_total"])
+    if server.monitor is not None:
+        rec["monitor"] = server.monitor.summary()
     return rec
 
 
@@ -188,6 +209,11 @@ def format_summary(rec: dict) -> str:
     if "cohorts" in rec:
         note += (f", cohorts={rec['cohorts']}"
                  f", edge_merges={rec['edge_merges']}")
+    if "monitor" in rec:
+        mon = rec["monitor"]
+        note += f", alerts={mon['alerts_total']}"
+        if mon["slo_breached"]:
+            note += " SLO-BREACHED"
     return (f"[train] done: {rec['rounds']} rounds, "
             f"{rec['aggregations']} aggregations, "
             f"uplink_bytes={rec['uplink_bytes']}, "
@@ -196,16 +222,23 @@ def format_summary(rec: dict) -> str:
 
 class JsonlLog:
     """Append-mode structured run log (one JSON object per line); a None
-    path makes every call a no-op so call sites stay unconditional."""
+    path makes every call a no-op so call sites stay unconditional.
+
+    Every record is flushed on write so a crashed or SIGKILLed run leaves
+    a readable (if truncated) JSONL for `launch/report.py`; the final
+    summary is additionally fsynced so a clean exit survives the OS too.
+    """
 
     def __init__(self, path=None):
         self.path = path
         self._fh = open(path, "a", encoding="utf-8") if path else None
 
-    def write(self, rec: dict):
+    def write(self, rec: dict, fsync: bool = False):
         if self._fh is not None:
             self._fh.write(json.dumps(rec) + "\n")
             self._fh.flush()
+            if fsync:
+                os.fsync(self._fh.fileno())
 
     def close(self):
         if self._fh is not None:
@@ -290,7 +323,23 @@ def main():
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="write the final telemetry metrics snapshot JSON "
                          "to PATH at exit (implies --telemetry)")
+    ap.add_argument("--monitor", default="off", choices=["off", "on"],
+                    help="run-health monitor (runtime/monitor.py): online "
+                         "anomaly detectors over every round record; "
+                         "alerts land in the JSONL log and the console "
+                         "round line (implies telemetry)")
+    ap.add_argument("--slo", default=None, metavar="SPEC",
+                    help="fail-fast SLO: comma-separated severities "
+                         "('warn'|'error') and/or detector names; a "
+                         "matching alert stops the run and exits nonzero "
+                         "(implies --monitor on)")
+    ap.add_argument("--byte-budget", type=int, default=None,
+                    metavar="BYTES",
+                    help="byte_budget detector threshold on cumulative "
+                         "up+down wire bytes")
     args = ap.parse_args()
+    if args.slo is not None:
+        args.monitor = "on"
     if args.trace or args.metrics:
         args.telemetry = True
 
@@ -314,7 +363,9 @@ def main():
         ingest_batch=args.ingest_batch,
         cohorts=args.cohorts, resync_batching=args.resync_batching,
         telemetry=args.telemetry,
-        telemetry_kernels=args.telemetry_kernels)
+        telemetry_kernels=args.telemetry_kernels,
+        monitor=args.monitor, slo=args.slo,
+        monitor_byte_budget=args.byte_budget)
 
     ck = None
     if args.ckpt_dir:
@@ -348,12 +399,14 @@ def main():
             ck.save(server.round, server.checkpoint_trees(),
                     extra=server.state_dict())
             last_ck = server.round
+        if server.monitor is not None and server.monitor.slo_breached:
+            break
         if not sim._heap:
             break
     if ck is not None:
         ck.wait()   # the last async save must land before the process exits
     summary = summary_record(server, sim)
-    jlog.write(summary)
+    jlog.write(summary, fsync=True)
     jlog.close()
     if args.trace:
         server.tel.export_chrome_trace(args.trace)
@@ -363,6 +416,11 @@ def main():
             json.dump(server.tel.snapshot(), fh, indent=1)
         print(f"[train] wrote metrics snapshot to {args.metrics}")
     print(format_summary(summary))
+    if server.monitor is not None and server.monitor.slo_breached:
+        for a in server.monitor.slo_violations:
+            print(f"[train] SLO violation: round {a.round} "
+                  f"{a.detector} ({a.severity}): {a.message}")
+        raise SystemExit(2)
 
 
 if __name__ == "__main__":

@@ -350,6 +350,18 @@ class FLSimulation:
             # histogram summaries only) — history keys are unchanged when
             # telemetry is off, which the bit-identity test pins
             rec["telemetry"] = self.tel.snapshot(compact=True)
+        mon = self.server.monitor
+        if mon is not None:
+            # memory watchdog: the resident-state breakdown rides every
+            # round record as mem_* fields (cohort-fragmentation evidence),
+            # then the detectors read the finished record.  Alerts attach
+            # only when non-empty, and none of this block runs with
+            # monitor='off' — the bit-identity pin covers it.
+            for k, v in self.server.resident_state_bytes().items():
+                rec[f"mem_{k}"] = v
+            fired = mon.on_round(rec)
+            if fired:
+                rec["alerts"] = [a.to_dict() for a in fired]
         self.history.append(rec)
         for cid in agg.notify:
             self._notify(cid)
@@ -388,12 +400,16 @@ class FLSimulation:
             if cid not in self._inflight and cid not in self._delivering:
                 self.server.mark_dispatched(cid)
                 self._dispatch(cid)
+        mon = self.server.monitor
         while self._heap:
             # peek before popping: breaking must leave the next event queued
             # so a later run() call (checkpoint-chunked driving) resumes it
-            # instead of silently dropping one client's upload.
+            # instead of silently dropping one client's upload — the SLO
+            # fail-fast stop included (train.py reports it and exits
+            # nonzero; a test harness can keep driving past it).
             if (self._heap[0].time > max_time
-                    or self.server.round >= max_rounds):
+                    or self.server.round >= max_rounds
+                    or (mon is not None and mon.slo_breached)):
                 break
             ev = heapq.heappop(self._heap)
             if not ev.valid:

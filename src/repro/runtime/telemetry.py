@@ -112,6 +112,11 @@ class Telemetry:
         self._wall_stack: List[str] = []
         # simulated-clock track name -> tid (tid 1 reserved for "server")
         self._sim_tids: Dict[str, int] = {"server": 1}
+        # track -> span name -> cumulative simulated busy seconds; O(1)
+        # per (track, name) pair regardless of run length, so the run
+        # monitor's straggler detector can read per-client utilisation
+        # without walking the span list
+        self._sim_busy: Dict[str, Dict[str, float]] = {}
 
     # ------------------------------------------------------------- metrics
     def counter(self, name: str, value: float = 1, **labels) -> None:
@@ -157,6 +162,8 @@ class Telemetry:
         """Complete span on the simulated clock (seconds in, µs stored)."""
         if not self.enabled:
             return
+        busy = self._sim_busy.setdefault(track, {})
+        busy[name] = busy.get(name, 0.0) + max(t1 - t0, 0.0)
         self._push_span({
             "name": name,
             "ph": "X",
@@ -180,6 +187,13 @@ class Telemetry:
             "args": attrs,
         })
 
+    def sim_track_busy(self) -> Dict[str, Dict[str, float]]:
+        """Cumulative simulated busy seconds per track per span name
+        (e.g. ``{'client3': {'train': 41.2, 'upload': 3.1}}``) — the run
+        monitor's straggler-dominance input.  Not checkpointed: a restored
+        run re-warms it from its own spans."""
+        return {track: dict(names) for track, names in self._sim_busy.items()}
+
     def _push_span(self, ev: Dict[str, Any]) -> None:
         if len(self._spans) < MAX_SPANS:
             self._spans.append(ev)
@@ -190,8 +204,10 @@ class Telemetry:
     def snapshot(self, compact: bool = False) -> Dict[str, Any]:
         """JSON-able metrics snapshot.
 
-        ``compact=True`` drops raw histogram samples (keeps summary stats)
-        — the form merged into per-round simulator history records.
+        ``compact=True`` drops raw histogram samples and keeps a bounded
+        summary (count/sum/min/max/mean/p50/p95) — O(1) per histogram, the
+        form merged into per-round simulator history records so long runs
+        don't grow per-round records with the sample count.
         """
         hists = {}
         for k, vals in self._hists.items():
@@ -202,7 +218,15 @@ class Telemetry:
                 "max": max(vals) if vals else None,
                 "mean": (sum(vals) / len(vals)) if vals else None,
             }
-            if not compact:
+            if compact:
+                if vals:
+                    s = sorted(vals)
+                    last = len(s) - 1
+                    summ["p50"] = s[min(last, int(0.50 * len(s)))]
+                    summ["p95"] = s[min(last, int(0.95 * len(s)))]
+                else:
+                    summ["p50"] = summ["p95"] = None
+            else:
                 summ["values"] = list(vals)
             hists[k] = summ
         return {

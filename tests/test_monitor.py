@@ -1,0 +1,519 @@
+"""Run-health monitor: detector calibration, SLO gates, off-mode pin,
+report rendering.
+
+The contract under test (runtime/monitor.py + its threading through
+server/simulator/train + launch/report.py):
+
+* each detector fires on its own injected pathology and ONLY its own —
+  no cross-talk — and a healthy synthetic run fires nothing;
+* ``monitor='off'`` (the default) is bit-identical to the monitor-free
+  stack (times, RNG stream, wire bytes, history keys);
+* ``monitor='on'`` adds mem_* watchdog fields per round and typed alerts
+  when detectors fire; an SLO breach stops the simulator at the next
+  round boundary;
+* ``launch/report.py`` renders self-contained HTML from a JSONL run log
+  (including a truncated one from a SIGKILLed run) and diffs two runs.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.server import FLConfig, SeaflServer
+from repro.experiment import ExperimentConfig, run_experiment
+from repro.launch.report import generate, load_run
+from repro.runtime.monitor import (
+    DETECTOR_NAMES,
+    Alert,
+    MonitorConfig,
+    RunMonitor,
+    parse_slo,
+)
+from repro.runtime.simulator import SimConfig
+from repro.runtime.telemetry import Telemetry
+
+
+# ---------------------------------------------------------------- helpers
+
+def tiny_cfg(seed=3, **flkw):
+    fl = FLConfig(algorithm="seafl", n_clients=12, concurrency=6,
+                  buffer_size=3, staleness_limit=4, local_epochs=2,
+                  local_lr=0.05, batch_size=16, seed=seed, **flkw)
+    sim = SimConfig(speed_model="pareto", base_epoch_time=1.0, seed=seed)
+    return ExperimentConfig(dataset="tiny", n_train=600, n_test=120,
+                            model="mlp", fl=fl, sim=sim, seed=seed)
+
+
+def healthy_rec(r, **over):
+    """One synthetic healthy round record: accuracy climbing, staleness
+    small and varied, steady round cadence."""
+    rec = {"round": r, "time": float(r),
+           "acc": 0.3 + 0.02 * r,
+           "staleness_max": float(1 + r % 2),
+           "bytes": 1000 * r, "bytes_down": 800 * r}
+    rec.update(over)
+    return rec
+
+
+def feed(mon, recs):
+    fired = []
+    for rec in recs:
+        fired.extend(mon.on_round(dict(rec)))
+    return fired
+
+
+def detectors_of(alerts):
+    return {a.detector for a in alerts}
+
+
+# ------------------------------------------------------------ SLO parsing
+
+def test_parse_slo_grammar():
+    assert parse_slo(None) is None
+    assert parse_slo("") is None
+    p = parse_slo("warn")
+    assert p.min_severity == "warn" and not p.detectors
+    p = parse_slo("error,staleness_blowup, plateau")
+    assert p.min_severity == "error"
+    assert p.detectors == {"staleness_blowup", "plateau"}
+    # lowest named severity wins
+    assert parse_slo("error,warn").min_severity == "warn"
+    with pytest.raises(ValueError, match="unknown SLO token"):
+        parse_slo("warn,not_a_detector")
+
+
+def test_slo_policy_violation_logic():
+    a_warn = Alert("plateau", "warn", 5, 5.0, "m")
+    a_err = Alert("divergence", "error", 6, 6.0, "m")
+    assert parse_slo("error").violates(a_err)
+    assert not parse_slo("error").violates(a_warn)
+    assert parse_slo("warn").violates(a_warn)
+    assert parse_slo("plateau").violates(a_warn)
+    assert not parse_slo("plateau").violates(a_err)
+
+
+def test_bad_slo_fails_at_server_construction():
+    params = {"w": np.zeros(8, np.float32)}
+    cfg = FLConfig(algorithm="seafl", n_clients=4, concurrency=2,
+                   buffer_size=2, monitor="on", slo="no_such_detector")
+    with pytest.raises(ValueError, match="unknown SLO token"):
+        SeaflServer(cfg, params, {i: 10 for i in range(4)})
+    with pytest.raises(ValueError, match="monitor must be"):
+        SeaflServer(FLConfig(monitor="maybe"), params,
+                    {i: 10 for i in range(4)})
+
+
+# ------------------------------------- synthetic-history detector units
+#
+# Each scenario injects exactly one pathology into an otherwise-healthy
+# stream and must raise exactly its own detector — the no-cross-talk
+# contract that keeps alerts trustworthy.
+
+def test_healthy_run_zero_alerts():
+    mon = RunMonitor()
+    fired = feed(mon, [healthy_rec(r) for r in range(1, 31)])
+    assert fired == []
+    assert mon.alert_counts() == {}
+    assert not mon.slo_breached
+
+
+def test_plateau_fires_alone():
+    mon = RunMonitor()
+    recs = [healthy_rec(r, acc=0.55) for r in range(1, 21)]
+    fired = feed(mon, recs)
+    assert detectors_of(fired) == {"plateau"}
+    assert all(a.severity == "warn" for a in fired)
+    assert fired[0].evidence["window"] == mon.cfg.acc_window
+
+
+def test_divergence_fires_alone():
+    mon = RunMonitor()
+    recs = [healthy_rec(r, acc=0.9 - 0.02 * r) for r in range(1, 21)]
+    fired = feed(mon, recs)
+    assert detectors_of(fired) == {"divergence"}
+    assert all(a.severity == "error" for a in fired)
+    assert fired[0].evidence["slope"] < 0
+
+
+def test_plateau_cooldown_limits_alert_storm():
+    mon = RunMonitor()
+    fired = feed(mon, [healthy_rec(r, acc=0.55) for r in range(1, 21)])
+    rounds = [a.round for a in fired]
+    assert all(b - a >= mon.cfg.cooldown_rounds
+               for a, b in zip(rounds, rounds[1:]))
+    assert len(fired) >= 2        # it re-fires after cooldown, not never
+
+
+def test_staleness_blowup_fires_alone():
+    mon = RunMonitor()
+    recs = [healthy_rec(r) for r in range(1, 10)]
+    recs.append(healthy_rec(10, staleness_max=50.0))
+    fired = feed(mon, recs)
+    assert detectors_of(fired) == {"staleness_blowup"}
+    assert fired[0].round == 10
+    assert fired[0].evidence["staleness_max"] == 50.0
+
+
+def test_straggler_dominance_fires_alone():
+    tel = Telemetry(enabled=True)
+    # client0 owns the fleet's simulated clock; five healthy peers
+    tel.sim_span("train", 0.0, 500.0, track="client0")
+    tel.sim_span("upload", 500.0, 501.0, track="client0")
+    for cid in range(1, 6):
+        tel.sim_span("train", 0.0, 1.0, track=f"client{cid}")
+        tel.sim_span("upload", 1.0, 1.2, track=f"client{cid}")
+    mon = RunMonitor(tel)
+    fired = feed(mon, [healthy_rec(r) for r in range(1, 10)])
+    assert detectors_of(fired) == {"straggler_dominance"}
+    ev = fired[0].evidence
+    assert ev["client"] == "client0"
+    assert ev["share"] > 0.9
+
+
+def test_straggler_needs_min_fleet():
+    tel = Telemetry(enabled=True)
+    tel.sim_span("train", 0.0, 500.0, track="client0")
+    tel.sim_span("train", 0.0, 1.0, track="client1")
+    mon = RunMonitor(tel)        # only 2 busy clients < straggler_min_clients
+    assert feed(mon, [healthy_rec(r) for r in range(1, 10)]) == []
+
+
+def test_buffer_starvation_fires_alone():
+    mon = RunMonitor()
+    recs = [healthy_rec(r) for r in range(1, 9)]         # 1s cadence
+    recs.append(healthy_rec(9, time=200.0))              # 192s gap
+    fired = feed(mon, recs)
+    assert detectors_of(fired) == {"buffer_starvation"}
+    assert fired[0].evidence["gap_s"] > 100
+
+
+def test_spill_pressure_fires_alone():
+    mon = RunMonitor()
+    recs = [healthy_rec(r, telemetry={
+        "counters": {"buffer.spill_grow": float(r)}}) for r in range(1, 8)]
+    fired = feed(mon, recs)
+    assert detectors_of(fired) == {"spill_pressure"}
+    assert fired[0].evidence["recent_spill_rounds"] >= mon.cfg.spill_rounds
+
+
+def test_band_saturation_fires_alone():
+    mon = RunMonitor()
+    recs = [healthy_rec(r, telemetry={
+        "counters": {"policy.band[band=1]": float(2 * r)}})
+        for r in range(1, 9)]
+    fired = feed(mon, recs)
+    assert detectors_of(fired) == {"band_saturation"}
+    assert fired[0].evidence["band"] == "policy.band[band=1]"
+
+
+def test_band_mix_stays_quiet():
+    mon = RunMonitor()
+    recs = [healthy_rec(r, telemetry={"counters": {
+        "policy.band[band=0]": float(r),
+        "policy.band[band=1]": float(r),
+    }}) for r in range(1, 15)]
+    assert feed(mon, recs) == []
+
+
+def test_byte_budget_fires_alone_and_once():
+    mon = RunMonitor(config=MonitorConfig(byte_budget=10_000))
+    recs = [healthy_rec(r) for r in range(1, 15)]    # crosses at r=6
+    fired = feed(mon, recs)
+    assert detectors_of(fired) == {"byte_budget"}
+    assert len(fired) == 1                           # one overrun, one alert
+    assert fired[0].severity == "error"
+    assert fired[0].evidence["total_bytes"] > 10_000
+
+
+def test_cohort_fragmentation_fires_alone():
+    mon = RunMonitor()
+    recs = [healthy_rec(r, cohorts=12, mem_tracking_entries=12)
+            for r in range(1, 8)]
+    fired = feed(mon, recs)
+    assert detectors_of(fired) == {"cohort_fragmentation"}
+    assert fired[0].evidence["streak"] == mon.cfg.frag_consecutive
+
+
+def test_cohort_sharing_stays_quiet():
+    mon = RunMonitor()
+    recs = [healthy_rec(r, cohorts=3, mem_tracking_entries=12)
+            for r in range(1, 15)]
+    assert feed(mon, recs) == []
+
+
+def test_resync_storm_fires_alone():
+    mon = RunMonitor()
+    recs = [healthy_rec(r, telemetry={
+        "counters": {"dispatch.resync": float(3 * r)}})
+        for r in range(1, 8)]
+    fired = feed(mon, recs)
+    assert detectors_of(fired) == {"resync_storm"}
+    assert fired[0].evidence["resyncs_per_round"] >= mon.cfg.resync_per_round
+
+
+def test_alert_shape_and_summary():
+    mon = RunMonitor(config=MonitorConfig(byte_budget=10), slo="error")
+    feed(mon, [healthy_rec(1)])
+    assert mon.slo_breached
+    d = mon.alerts[0].to_dict()
+    assert set(d) == {"detector", "severity", "round", "sim_time",
+                      "message", "evidence"}
+    assert d["detector"] in DETECTOR_NAMES
+    json.dumps(mon.summary())
+    assert mon.summary()["alerts_total"] == 1
+    assert mon.summary()["slo_breached"] is True
+
+
+# --------------------------------------------- off-mode bit-identity pin
+
+def test_monitor_off_bit_identical_to_on():
+    """The load-bearing pin: enabling the monitor changes no simulated
+    time, no RNG stream, no wire bytes — it only ADDS the telemetry,
+    mem_*, and (when firing) alerts keys to history records."""
+    sim_off, h_off = run_experiment(
+        tiny_cfg(dispatch_compression="topk:0.1"), max_rounds=6)
+    sim_on, h_on = run_experiment(
+        tiny_cfg(dispatch_compression="topk:0.1", monitor="on"),
+        max_rounds=6)
+    assert len(h_off) == len(h_on)
+    for a, b in zip(h_off, h_on):
+        assert a["time"] == b["time"]
+        extra = set(b) - set(a)
+        assert extra == {"telemetry"} | {k for k in extra
+                                         if k.startswith("mem_")}
+        for k in a:
+            if isinstance(a[k], float):
+                assert a[k] == b[k], k
+    np.testing.assert_array_equal(np.asarray(sim_off.server.global_flat),
+                                  np.asarray(sim_on.server.global_flat))
+    assert sim_off.server.bytes_uploaded == sim_on.server.bytes_uploaded
+    assert sim_off.server.bytes_downloaded == sim_on.server.bytes_downloaded
+    assert sim_off._rng.bit_generator.state == \
+        sim_on._rng.bit_generator.state
+
+
+def test_monitor_off_history_untouched():
+    sim, hist = run_experiment(tiny_cfg(), max_rounds=3)
+    assert sim.server.monitor is None
+    for h in hist:
+        assert "alerts" not in h
+        assert not any(k.startswith("mem_") for k in h)
+
+
+def test_monitor_on_adds_mem_watchdog_fields():
+    sim, hist = run_experiment(
+        tiny_cfg(dispatch_compression="topk:0.1", monitor="on"),
+        max_rounds=4)
+    assert sim.server.monitor is not None
+    assert sim.server.tel.enabled        # monitor implies telemetry
+    for h in hist:
+        assert h["mem_server_array_bytes"] > 0
+        assert "mem_tracking_entries" in h
+    # the healthy tiny fleet stays silent — detector-calibration canary
+    assert sim.server.monitor.alerts == []
+
+
+def test_slo_fail_fast_stops_simulator():
+    sim, hist = run_experiment(
+        tiny_cfg(monitor="on", slo="byte_budget", monitor_byte_budget=1),
+        max_rounds=50)
+    assert len(hist) == 1                # stopped at the first round
+    assert sim.server.monitor.slo_breached
+    assert hist[0]["alerts"][0]["detector"] == "byte_budget"
+    # the heap still holds events: fail-fast must not drain the queue
+    assert sim._heap
+
+
+def test_monitor_state_not_checkpointed():
+    sim, _ = run_experiment(tiny_cfg(monitor="on"), max_rounds=3)
+    srv = sim.server
+    assert "monitor" not in srv.state_dict()
+    fresh = SeaflServer(srv.cfg, srv.packer.unpack(srv._flat),
+                        dict(srv.client_sizes))
+    fresh.load_state(srv.state_dict(), srv.checkpoint_trees())
+    assert fresh.monitor is not None and fresh.monitor.alerts == []
+
+
+# --------------------------------------------------- train.py plumbing
+
+def test_round_record_carries_alerts_and_mem():
+    from repro.launch.train import format_round, round_record
+    h = {"round": 7, "time": 30.0, "acc": -2.0, "staleness_max": 3.0,
+         "bytes": 5000, "bytes_down": 400, "mem_server_array_bytes": 123,
+         "alerts": [{"detector": "plateau", "severity": "warn", "round": 7,
+                     "sim_time": 30.0, "message": "m", "evidence": {}}]}
+    rec = round_record(h, wall=1.0)
+    assert rec["mem_server_array_bytes"] == 123
+    assert rec["uplink_bytes"] == 5000
+    assert rec["alerts"][0]["detector"] == "plateau"
+    line = format_round(rec)
+    assert "ALERT[warn:plateau]" in line
+    json.dumps(rec)
+
+
+def test_summary_record_includes_monitor():
+    from repro.launch.train import format_summary, summary_record
+    sim, _ = run_experiment(tiny_cfg(monitor="on"), max_rounds=3)
+    rec = summary_record(sim.server, sim)
+    assert rec["monitor"]["alerts_total"] == 0
+    assert "alerts=0" in format_summary(rec)
+
+
+def test_jsonl_log_survives_sigkill(tmp_path):
+    """A SIGKILLed run must leave a parseable JSONL prefix: every
+    completed write is flushed, and report.load_run drops the torn tail
+    line the kill left behind."""
+    log_path = tmp_path / "killed.jsonl"
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    child = textwrap.dedent(f"""
+        import os, signal, sys
+        sys.path.insert(0, {src!r})
+        from repro.launch.train import JsonlLog
+        log = JsonlLog({str(log_path)!r})
+        for i in range(3):
+            log.write({{"event": "round", "round": i + 1,
+                        "sim_time": float(i), "heldout_ce": 1.0,
+                        "staleness_max": 0.0, "wall": 0.0}})
+        log._fh.write('{{"event": "round", "round": 99, "sim')  # torn line
+        log._fh.flush()
+        os.kill(os.getpid(), signal.SIGKILL)
+    """)
+    res = subprocess.run([sys.executable, "-c", child],
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == -signal.SIGKILL
+    run = load_run(str(log_path))
+    assert [r["round"] for r in run["rounds"]] == [1, 2, 3]
+    assert run["summary"] is None
+    # and the report renders from the partial log without error
+    out = tmp_path / "partial.html"
+    doc = generate(str(log_path), str(out))
+    assert "</html>" in doc and out.exists()
+
+
+# ----------------------------------------------------------- report.py
+
+def _write_log(path, n=8, alerts_at=(), band_counters=False, summary=True):
+    cum_band = 0.0
+    with open(path, "w", encoding="utf-8") as fh:
+        for r in range(1, n + 1):
+            rec = {"event": "round", "round": r, "sim_time": float(3 * r),
+                   "heldout_ce": 2.0 - 0.1 * r, "staleness_max": 1.0,
+                   "wall": 0.1 * r, "uplink_bytes": 1000 * r,
+                   "downlink_bytes": 700 * r,
+                   "mem_server_array_bytes": 4096}
+            if band_counters:
+                cum_band += 2
+                rec["telemetry"] = {"counters": {
+                    "policy.band[band=1]": cum_band,
+                    "policy.band[band=0]": float(r % 2)}}
+            if r in alerts_at:
+                rec["alerts"] = [{"detector": "staleness_blowup",
+                                  "severity": "warn", "round": r,
+                                  "sim_time": 3.0 * r,
+                                  "message": "staleness blowup: <test>",
+                                  "evidence": {"staleness_max": 9}}]
+            fh.write(json.dumps(rec) + "\n")
+        if summary:
+            fh.write(json.dumps({
+                "event": "summary", "rounds": n, "aggregations": n,
+                "uplink_bytes": 1000 * n, "downlink_bytes": 700 * n,
+                "monitor": {"alerts_total": len(alerts_at),
+                            "alerts_by_detector": {},
+                            "slo_breached": False,
+                            "slo_violations": []}}) + "\n")
+
+
+def test_report_renders_self_contained_html(tmp_path):
+    log = tmp_path / "run.jsonl"
+    _write_log(str(log), alerts_at=(5,), band_counters=True)
+    out = tmp_path / "report.html"
+    doc = generate(str(log), str(out))
+    assert doc.startswith("<!doctype html>") and doc.endswith("</html>")
+    # self-contained: no external fetches of any kind
+    assert "http://" not in doc and "https://" not in doc
+    assert "src=" not in doc
+    # the run's sections are all there
+    assert "held-out cross-entropy" in doc
+    assert "wire bytes per round" in doc
+    assert "drift-band occupancy" in doc and "band 1" in doc
+    assert "staleness_blowup" in doc
+    assert "&lt;test&gt;" in doc            # alert messages are escaped
+    assert out.read_text() == doc
+
+
+def test_report_healthy_run_and_trace_table(tmp_path):
+    log = tmp_path / "run.jsonl"
+    _write_log(str(log))
+    tel = Telemetry(enabled=True)
+    tel.sim_span("train", 0.0, 20.0, track="client0")
+    tel.sim_span("upload", 20.0, 21.0, track="client0")
+    for cid in range(1, 5):
+        tel.sim_span("train", 0.0, 2.0, track=f"client{cid}")
+    trace = tmp_path / "trace.json"
+    tel.export_chrome_trace(str(trace))
+    doc = generate(str(log), str(tmp_path / "r.html"), trace=str(trace))
+    assert "healthy" in doc
+    assert "per-client utilization" in doc
+    assert "client0" in doc and "client1" in doc
+    assert "straggler" in doc              # 20s vs 2s median trips the flag
+
+
+def test_report_compare_mode(tmp_path):
+    a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    _write_log(str(a), n=8)
+    _write_log(str(b), n=10, alerts_at=(3, 7))
+    out = tmp_path / "diff.html"
+    doc = generate(str(a), str(out), compare_with=str(b))
+    assert "A/B diff" in doc
+    assert "alert deltas by detector" in doc
+    assert "staleness_blowup" in doc
+    assert "</html>" in doc and out.exists()
+
+
+def test_report_cli(tmp_path):
+    log = tmp_path / "run.jsonl"
+    _write_log(str(log))
+    out = tmp_path / "cli.html"
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env = {**os.environ, "PYTHONPATH": src}
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.report", str(log),
+         "--out", str(out)],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert out.exists() and "</html>" in out.read_text()
+
+
+# ------------------------------------------------------------ slow e2e
+
+@pytest.mark.slow
+def test_train_cli_slo_breach_exits_nonzero(tmp_path):
+    """End-to-end acceptance: --slo with an impossible byte budget stops
+    the driver with a nonzero exit, and the JSONL log still carries the
+    alert plus a final summary record."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    jsonl_p = tmp_path / "run.jsonl"
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "internvl2-1b", "--rounds", "5", "--clients", "4",
+         "--concurrency", "2", "--buffer", "2",
+         "--slo", "byte_budget", "--byte-budget", "1",
+         "--log-jsonl", str(jsonl_p)],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert res.returncode == 2, (res.returncode, res.stderr[-2000:])
+    assert "SLO violation" in res.stdout
+    lines = [json.loads(ln) for ln in jsonl_p.read_text().splitlines()]
+    assert lines[-1]["event"] == "summary"
+    assert lines[-1]["monitor"]["slo_breached"] is True
+    rounds = [ln for ln in lines if ln["event"] == "round"]
+    assert any(a["detector"] == "byte_budget"
+               for r in rounds for a in r.get("alerts", []))

@@ -158,6 +158,28 @@ def test_snapshot_roundtrip_and_compact():
     json.dumps(full)   # everything JSON-able as exported
 
 
+def test_compact_snapshot_is_bounded_summary_stats():
+    """Compact histograms carry O(1) summary stats (count/mean/p50/p95/
+    max), never the raw value list — the run-monitor ingests one of these
+    per round, so its size must not grow with observation count."""
+    tel = Telemetry(enabled=True)
+    tel.histogram_many("h", [float(v) for v in range(1, 101)])
+    h = tel.snapshot(compact=True)["histograms"]["h"]
+    assert set(h) == {"count", "sum", "mean", "min", "max", "p50", "p95"}
+    assert h["count"] == 100
+    assert h["p50"] == 51.0 and h["p95"] == 96.0
+    assert h["min"] == 1.0 and h["max"] == 100.0
+    # size is pinned: 100 obs and 10_000 obs serialize identically large
+    small = len(json.dumps(h))
+    tel.histogram_many("h", [50.0] * 9_900)
+    big = len(json.dumps(tel.snapshot(compact=True)["histograms"]["h"]))
+    assert big <= small + 8      # digits may widen; the shape may not
+    # empty histograms keep the schema with null stats
+    tel._hists["empty"] = []
+    e = tel.snapshot(compact=True)["histograms"]["empty"]
+    assert e["count"] == 0 and e["p50"] is None and e["p95"] is None
+
+
 def test_chrome_trace_schema():
     tel = Telemetry(enabled=True)
     tel.sim_span("train", 0.0, 1.0, track="client0")
