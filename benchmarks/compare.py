@@ -10,7 +10,11 @@ decode+apply MB/s — regresses more than ``THRESHOLD`` (20%) below its
 baseline.  The fleet report carries its own gates (``_gate_fleet``):
 cohort-mode state must stay ~O(cohorts) across the fleet sweep, cohort vs
 per-client accuracy parity must hold at every size, and the 10^4-point
-per-round wall clock must not regress >20% over baseline.  Non-throughput fields (wire bytes, hit rates, speedup ratios)
+per-round wall clock must not regress >20% over baseline.  The scheduler
+sweep (``--only sched``, ``BENCH_sched.json``) carries its own
+within-report gate (``_gate_sched``): the ranked ``rate_staleness``
+policy's mean time-to-accuracy must beat ``random``'s on every
+availability scenario.  Non-throughput fields (wire bytes, hit rates, speedup ratios)
 are reported in the delta table but never gate: byte counts are asserted
 exactly by the test suite, and ratios are derived from the gated numbers.
 
@@ -37,7 +41,8 @@ import sys
 
 BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 BASELINE_DIR = os.path.join(BENCH_DIR, "baselines")
-FILES = ("BENCH_ingest.json", "BENCH_dispatch.json", "BENCH_fleet.json")
+FILES = ("BENCH_ingest.json", "BENCH_dispatch.json", "BENCH_fleet.json",
+         "BENCH_sched.json")
 THRESHOLD = 0.20          # fail below (1 - THRESHOLD) x baseline
 OBS_OVERHEAD_MAX_PCT = 5.0     # telemetry-on slowdown allowed on hot paths
 FLEET_STATE_GROWTH_MAX = 3.0   # cohort state across the 10^2..10^5 sweep
@@ -50,6 +55,7 @@ GATED = {
         "ingest_MBps", "ingest_MBps_coalesced", "stream_batched_MBps"),
     "BENCH_dispatch.json": ("apply_MBps",),
     "BENCH_fleet.json": (),   # gated via _gate_fleet, not per-scheme keys
+    "BENCH_sched.json": (),   # gated via _gate_sched, not per-scheme keys
 }
 # informational (never gating) keys shown in the table when present
 INFO = {
@@ -57,6 +63,7 @@ INFO = {
                           "stream_auto_MBps", "auto_vs_batched_speedup"),
     "BENCH_dispatch.json": (),
     "BENCH_fleet.json": (),
+    "BENCH_sched.json": (),
 }
 
 
@@ -282,6 +289,43 @@ def _gate_fleet(data: dict, base: dict, rows: list, failures: list) -> None:
                      "ok" if ok else "REGRESSED"))
 
 
+def _gate_sched(data: dict, rows: list, failures: list) -> None:
+    """Gate the availability x scheduler sweep (BENCH_sched.json).
+
+    A *within-report* invariant, `_gate_adaptive_ratio` discipline: the
+    ranked ``rate_staleness`` policy exists to reach target accuracy
+    faster than uniform-random dispatch when slots are scarce and clients
+    churn, so its seed-and-target-averaged TTA must come in strictly
+    below ``random``'s on every scenario in the sweep (steady, diurnal,
+    longtail).  The runs are deterministic given the committed seeds, so
+    this compares reproducible numbers — a policy or simulator change
+    that costs the ranked policy its edge fails CI even when every
+    throughput baseline is fine.
+    """
+    scens = data.get("scenarios")
+    if not scens:
+        failures.append("sched/scenarios: section missing from the current "
+                        "report (did bench_sched change?)")
+        return
+    for scen, policies in sorted(scens.items()):
+        rnd = policies.get("random", {}).get("tta_mean_s")
+        rate = policies.get("rate_staleness", {}).get("tta_mean_s")
+        tag = f"sched/{scen}/tta_mean_s(rate<random)"
+        if rnd is None or rate is None:
+            failures.append(f"sched/{scen}: tta_mean_s missing for random "
+                            f"or rate_staleness")
+            continue
+        ok = rate < rnd
+        if not ok:
+            failures.append(
+                f"sched/{scen}: rate_staleness mean TTA {rate:.1f}s >= "
+                f"random's {rnd:.1f}s — the ranked policy no longer beats "
+                f"uniform dispatch on this scenario")
+        rows.append((tag, float(rnd), float(rate),
+                     (rate - rnd) / rnd if rnd else None,
+                     "ok" if ok else "REGRESSED"))
+
+
 def compare(threshold: float = THRESHOLD) -> tuple[list[tuple], list[str]]:
     """-> (table rows: (metric, baseline, current, delta, status), failures)."""
     rows, failures = [], []
@@ -306,6 +350,8 @@ def compare(threshold: float = THRESHOLD) -> tuple[list[tuple], list[str]]:
             _gate_monitor(fname, cur_data, rows, failures)
         if fname == "BENCH_fleet.json":
             _gate_fleet(cur_data, base_data, rows, failures)
+        if fname == "BENCH_sched.json":
+            _gate_sched(cur_data, rows, failures)
         for metric in sorted(set(base_g) | set(cur_g)):
             tag = f"{fname.removeprefix('BENCH_').removesuffix('.json')}" \
                   f"/{metric}"

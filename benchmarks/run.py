@@ -16,9 +16,14 @@ Prints ``name,value,derived`` CSV.  Sections:
                                     server resident state + per-round wall
                                     clock vs 10^2..10^5 simulated clients,
                                     gated by benchmarks/compare.py
+  sched/*                         — availability x scheduler TTA sweep
+                                    (--only sched): three churn scenarios
+                                    x three dispatch policies, gated by
+                                    benchmarks/compare.py (rate_staleness
+                                    must beat random on every scenario)
 
 Usage: PYTHONPATH=src python -m benchmarks.run \
-           [--only figs|kernels|roofline|wire|fleet]
+           [--only figs|kernels|roofline|wire|fleet|sched]
 """
 from __future__ import annotations
 
@@ -31,7 +36,7 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=["figs", "kernels", "roofline", "wire",
-                                       "fleet"],
+                                       "fleet", "sched"],
                     default=None)
     args = ap.parse_args()
     print("name,value,derived")
@@ -46,6 +51,18 @@ def main() -> None:
             traceback.print_exc()
             print(f"bench_fleet,ERROR,{type(e).__name__}", flush=True)
             sys.exit(1)       # the fleet gate depends on this report
+        print(f"total_benchmark_wall_seconds,{time.time() - t0:.1f},",
+              flush=True)
+        return
+    if args.only == "sched":
+        from benchmarks.sched_bench import bench_sched
+        try:
+            for name, value, derived in bench_sched():
+                print(f"{name},{value},{derived}", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            print(f"bench_sched,ERROR,{type(e).__name__}", flush=True)
+            sys.exit(1)       # the scheduler gate depends on this report
         print(f"total_benchmark_wall_seconds,{time.time() - t0:.1f},",
               flush=True)
         return

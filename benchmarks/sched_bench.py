@@ -1,0 +1,169 @@
+"""Scheduler sweep: time-to-accuracy under client availability churn.
+
+The scheduling layer's claim (ISSUE 9) is that a ranked dispatch policy
+beats uniform-random client selection on wall-clock time-to-accuracy when
+clients are heterogeneous and churn on/off.  This bench runs the same
+tiny/mlp workload under three availability scenarios::
+
+    steady    availability='always'   (no churn; speed spread only)
+    diurnal   period=120s, duty=0.6   (correlated on/off windows)
+    longtail  mean_on=30s, mean_off=60s (exponential short sessions)
+
+crossed with the three shipped policies (``random``, ``stragglers_last``,
+``rate_staleness``), and records simulated seconds to a ladder of accuracy
+targets.
+
+Workload design — the knobs are chosen to expose slot economics, not to
+flatter any policy:
+
+  * ``concurrency=6, buffer_size=4`` — aggregation needs 4 of 6 in-flight
+    arrivals, so a slot wasted on a monster-slow (or about-to-vanish)
+    client directly stalls the buffer.  With concurrency >> buffer the
+    scheduler barely matters: random's extra in-flight diversity keeps
+    deliveries pipelined for free, and every policy ties.
+  * ``staleness_limit=None`` — the β sync-wait valve is opened so the
+    measured difference is pure dispatch policy, not the staleness
+    controller reacting to it.
+  * near-IID data (``dirichlet alpha=100``) — under heavy label skew the
+    accuracy curve is dominated by *which* clients contribute, which is
+    partly luck; near-IID isolates the cadence effect schedulers control.
+  * pareto bandwidth + 2% crash rate — the heterogeneity the ranked
+    policies exist to route around.
+
+Metric robustness: a single-seed, single-target TTA is noise-dominated
+(accuracy curves cross), so the reported number per (scenario, policy) is
+the mean over ``SEEDS`` x ``TARGETS`` of first-crossing time, with a
+missed target counted as ``MAX_TIME_S``.  All runs are deterministic
+given the seed, so the gate compares reproducible numbers.
+
+Emits BENCH_sched.json; ``benchmarks/compare.py`` gates it with a
+*within-report* invariant: ``rate_staleness`` mean TTA must come in
+strictly below ``random``'s on every scenario — a scheduling regression
+fails CI even if every other benchmark is fine.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+BENCH_SCHED_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_sched.json")
+
+N_CLIENTS = 32
+SEEDS = (0, 1, 2)
+TARGETS = (0.80, 0.85, 0.88, 0.90)
+MAX_TIME_S = 400.0
+POLICIES = ("random", "stragglers_last", "rate_staleness")
+SCENARIOS = {
+    "steady": dict(availability="always"),
+    "diurnal": dict(availability="diurnal", avail_period=120.0,
+                    avail_duty=0.6),
+    "longtail": dict(availability="longtail", avail_mean_on=30.0,
+                     avail_mean_off=60.0),
+}
+
+
+def _build_workload():
+    """Shared data/model/clients (seed 0); per-run seeds vary FL + sim RNG."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.client import Client, make_epoch_fn
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import make_image_dataset
+    from repro.models.cnn import MODELS
+
+    train, test, meta = make_image_dataset("tiny", 2000, 1000, seed=0)
+    model = MODELS["mlp"](num_classes=meta["n_classes"],
+                          d_in=meta["img"] ** 2 * meta["channels"])
+    parts = dirichlet_partition(train["y"], N_CLIENTS, 100.0, seed=0)
+    epoch_fn = make_epoch_fn(model.loss)
+    clients = {
+        cid: Client(cid, {k: v[ix] for k, v in train.items()}, epoch_fn,
+                    n_samples=len(ix), batch_size=32, seed=0)
+        for cid, ix in enumerate(parts)
+    }
+    params0 = model.init(jax.random.PRNGKey(0))
+    test_j = {k: jnp.asarray(v) for k, v in test.items()}
+    acc_jit = jax.jit(model.accuracy)
+    return clients, params0, (lambda p: float(acc_jit(p, test_j)))
+
+
+def _run_one(clients, params0, eval_fn, scen_kwargs: dict, policy: str,
+             seed: int) -> dict:
+    from repro.core.server import FLConfig, SeaflServer
+    from repro.runtime.simulator import FLSimulation, SimConfig
+
+    fl = FLConfig(algorithm="seafl", n_clients=N_CLIENTS, concurrency=6,
+                  buffer_size=4, staleness_limit=None, local_epochs=2,
+                  local_lr=0.05, batch_size=32, seed=seed, scheduler=policy)
+    server = SeaflServer(fl, params0,
+                         {c: clients[c].n_samples for c in range(N_CLIENTS)})
+    sim = FLSimulation(server, clients,
+                       SimConfig(seed=seed, fail_prob=0.02,
+                                 bandwidth_model="pareto", **scen_kwargs),
+                       eval_fn=eval_fn, eval_every=1)
+    hist = sim.run(max_time=MAX_TIME_S)
+    accs = [(h["time"], h["acc"]) for h in hist if "acc" in h]
+    ttas = [next((t for t, a in accs if a >= tgt), MAX_TIME_S)
+            for tgt in TARGETS]
+    return {
+        "tta_ladder_s": round(float(np.mean(ttas)), 2),
+        "rounds": int(server.round),
+        "best_acc": round(max((a for _, a in accs), default=0.0), 4),
+        "deferrals": int(sim.deferrals),
+        "max_wait_s": round(max((h.get("sched_max_wait") or 0.0)
+                                for h in hist), 1) if hist else 0.0,
+    }
+
+
+def bench_sched():
+    """-> CSV rows (name, value, derived); writes BENCH_sched.json."""
+    clients, params0, eval_fn = _build_workload()
+    report = {
+        "workload": {
+            "dataset": "tiny", "model": "mlp", "n_clients": N_CLIENTS,
+            "concurrency": 6, "buffer_size": 4, "staleness_limit": None,
+            "dirichlet_alpha": 100.0, "fail_prob": 0.02,
+            "bandwidth_model": "pareto",
+        },
+        "seeds": list(SEEDS),
+        "targets": list(TARGETS),
+        "max_time_s": MAX_TIME_S,
+        "scenarios": {},
+    }
+    rows = []
+    for scen, scen_kwargs in SCENARIOS.items():
+        report["scenarios"][scen] = {}
+        for policy in POLICIES:
+            runs = [_run_one(clients, params0, eval_fn, scen_kwargs, policy,
+                             seed) for seed in SEEDS]
+            entry = {
+                "tta_mean_s": round(float(np.mean(
+                    [r["tta_ladder_s"] for r in runs])), 2),
+                "tta_per_seed_s": [r["tta_ladder_s"] for r in runs],
+                "rounds": [r["rounds"] for r in runs],
+                "best_acc": [r["best_acc"] for r in runs],
+                "deferrals": [r["deferrals"] for r in runs],
+                "max_wait_s": max(r["max_wait_s"] for r in runs),
+            }
+            report["scenarios"][scen][policy] = entry
+            rows.append((f"sched/{scen}/{policy}/tta_mean_s",
+                         entry["tta_mean_s"], ""))
+        rnd = report["scenarios"][scen]["random"]["tta_mean_s"]
+        rate = report["scenarios"][scen]["rate_staleness"]["tta_mean_s"]
+        if rate:
+            rows.append((f"sched/{scen}/rate_vs_random_speedup",
+                         round(rnd / rate, 3), "derived"))
+    with open(BENCH_SCHED_JSON, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    rows.append(("sched/report", BENCH_SCHED_JSON, "json"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,value,derived")
+    for name, value, derived in bench_sched():
+        print(f"{name},{value},{derived}")

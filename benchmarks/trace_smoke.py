@@ -29,11 +29,15 @@ def run(out_dir: str) -> dict:
     from repro.launch.report import generate, load_run
     from repro.runtime.simulator import SimConfig
 
+    # scheduler='rate_staleness' turns the ranked dispatch path on, so the
+    # zero-alert gate below also covers ScheduleSkewDetector: the ranked
+    # policy's own fairness floor must keep every client rotating well
+    # under the detector's skew_max_wait on a healthy fleet
     fl = FLConfig(algorithm="seafl", n_clients=12, concurrency=6,
                   buffer_size=3, staleness_limit=4, local_epochs=2,
                   local_lr=0.05, batch_size=16, seed=3,
                   dispatch_compression="topk:0.1", dispatch_history=8,
-                  telemetry=True, monitor="on")
+                  telemetry=True, monitor="on", scheduler="rate_staleness")
     cfg = ExperimentConfig(dataset="tiny", n_train=600, n_test=120,
                            model="mlp", fl=fl,
                            sim=SimConfig(speed_model="pareto", seed=3),

@@ -1,0 +1,102 @@
+"""Diurnal fleet: scheduling around availability churn.
+
+Cross-device fleets are not always-on — phones charge at night, in waves
+that follow timezones.  This walkthrough models that with the simulator's
+``diurnal`` availability mode (phase-shifted on/off square waves,
+period 120 s, 60% duty: at any instant ~40% of the fleet is dark) and
+asks the one question the scheduling layer exists to answer: given the
+same churn, does picking clients well beat picking them at random?
+
+Both policies run the identical workload (same data partition, same
+model init, same availability waves — availability draws come from their
+own RNG streams, so the fleets go dark at identical times in both runs):
+
+  random          the default: uniform draw from the eligible idle pool
+  rate_staleness  rank by predicted round time x predicted staleness
+                  (CSMAAFL-style), veto hopeless stragglers, fairness
+                  floor so nobody starves
+
+An offline client is simply ineligible — dispatches to it are deferred
+and clients that vanish mid-round have their in-flight work killed — so
+the scheduler's job is to spend the scarce concurrency slots on clients
+that will actually deliver before the buffer stalls.
+
+A single seed's time-to-accuracy is noise-dominated (accuracy curves
+cross), so — like benchmarks/sched_bench.py, whose random-vs-rank gap
+compare.py gates in CI across 3 availability scenarios — the headline
+number here is the mean first-crossing time over SEEDS x a ladder of
+accuracy TARGETS (a missed target counts as MAX_TIME).
+
+  PYTHONPATH=src python examples/diurnal_fleet.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.server import FLConfig
+from repro.experiment import ExperimentConfig, run_experiment
+from repro.runtime.simulator import SimConfig
+
+TARGETS = (0.80, 0.85, 0.88, 0.90)
+SEEDS = (0, 1, 2)
+MAX_TIME = 400.0
+
+
+def run_policy(policy, seed):
+    cfg = ExperimentConfig(
+        dataset="tiny", n_train=2000, n_test=400, model="mlp",
+        dirichlet_alpha=100.0,
+        # concurrency 6 vs buffer 4: aggregation needs 4 of 6 in-flight
+        # arrivals, so one slot wasted on a client that is slow or about
+        # to go dark stalls the round — the regime where policy matters
+        fl=FLConfig(algorithm="seafl", n_clients=32, concurrency=6,
+                    buffer_size=4, staleness_limit=None,
+                    local_epochs=2, local_lr=0.05, batch_size=32, seed=seed,
+                    scheduler=policy),
+        sim=SimConfig(seed=seed, fail_prob=0.02,
+                      bandwidth_model="pareto",
+                      availability="diurnal", avail_period=120.0,
+                      avail_duty=0.6),
+        seed=0,
+    )
+    sim, hist = run_experiment(cfg, max_time=MAX_TIME)
+    accs = [(h["time"], h["acc"]) for h in hist if "acc" in h]
+    ladder = [next((t for t, a in accs if a >= tgt), MAX_TIME)
+              for tgt in TARGETS]
+    return {
+        "tta": sum(ladder) / len(ladder),
+        "best": max((a for _, a in accs), default=0.0),
+        "deferrals": sim.deferrals,
+        "eligible_min": min((h["eligible"] for h in hist if "eligible" in h),
+                            default=0),
+    }
+
+
+def main():
+    results = {}
+    for policy in ("random", "rate_staleness"):
+        runs = [run_policy(policy, s) for s in SEEDS]
+        results[policy] = runs
+        print(f"{policy}: per-seed ladder TTA "
+              f"{[round(r['tta'], 1) for r in runs]} s")
+    cols = " ".join(f"{f'seed{s}':>8}" for s in SEEDS)
+    print(f"\n{'policy':>16} {cols} {'mean_tta':>9} {'best':>6} "
+          f"{'deferred':>8}")
+    for policy, runs in results.items():
+        ttas = " ".join(f"{r['tta']:7.1f}s" for r in runs)
+        mean = sum(r["tta"] for r in runs) / len(runs)
+        print(f"{policy:>16} {ttas} {mean:8.1f}s "
+              f"{max(r['best'] for r in runs):6.3f} "
+              f"{sum(r['deferrals'] for r in runs):8d}")
+    dip = min(r["eligible_min"] for r in results["random"])
+    speedup = (sum(r["tta"] for r in results["random"]) /
+               sum(r["tta"] for r in results["rate_staleness"]))
+    print(f"\nSame waves under both policies (the eligible fleet dips to "
+          f"{dip} of 32 clients\nat the trough); rate_staleness reaches the "
+          f"accuracy ladder {speedup:.2f}x faster on\naverage, because its "
+          "slots go to clients predicted to deliver fast and fresh —\nand "
+          "its reselection skips offline clients outright, where random's "
+          "re-dispatches\nget deferred.")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,6 +44,7 @@ from repro.runtime.cohorts import CohortDispatchSession
 from repro.runtime.dispatch import DispatchPayload, DispatchSession
 from repro.runtime.monitor import RunMonitor
 from repro.runtime.policy import DriftTracker, RatePolicy, RESYNC_MODES
+from repro.runtime.scheduler import make_scheduler
 from repro.runtime.telemetry import Telemetry
 from repro.runtime.transport import (
     Chunk, FlatErrorFeedback, IngestBatcher, IngestSession, UploadPayload,
@@ -155,6 +156,13 @@ class FLConfig:
     # hard budget on cumulative up+down wire bytes for the byte_budget
     # detector (None = unlimited)
     monitor_byte_budget: Optional[int] = None
+    # client-selection policy (runtime/scheduler.py): every idle-pool draw
+    # — start() warm-up, crash replacement, post-aggregation top-up — goes
+    # through it.  'random' reproduces the legacy uniform draw
+    # RNG-call-for-RNG-call (pinned bit-identical); 'stragglers_last' and
+    # 'rate_staleness' rank eligible clients by predicted round time
+    # (+ predicted staleness) from observed dispatch->deliver EMAs.
+    scheduler: str = "random"
     seed: int = 0
 
     def hyper(self) -> SeaflHyper:
@@ -199,6 +207,10 @@ class SeaflServer:
         self.monitor: Optional[RunMonitor] = (
             RunMonitor.from_config(cfg, self.tel)
             if cfg.monitor == "on" else None)
+        # pluggable client-selection policy; like the monitor, built
+        # eagerly (bad names fail at construction) and never checkpointed
+        # (ranking EMAs re-warm within a few rounds on resume)
+        self.scheduler = make_scheduler(cfg.scheduler, self.tel)
         self.packer = ParamPacker(params)
         self._flat = self.packer.pack(params)          # current global, (P,)
         self.round = 0
@@ -322,12 +334,14 @@ class SeaflServer:
             self.dispatch.age_cache(self.round)
 
     def _sample_idle(self, k: int) -> list[int]:
-        pool = sorted(self.idle)
-        if not pool or k <= 0:
-            return []
-        pick = self._rng.choice(len(pool), size=min(k, len(pool)),
-                                replace=False)
-        return [pool[i] for i in pick]
+        """Every idle-pool draw routes through the scheduler policy: it
+        filters offline clients out (when the simulator bound an
+        availability model) and ranks or samples the rest.  The default
+        RandomScheduler consumes ``self._rng`` exactly like the historic
+        inline draw here — the bit-identity pin in tests/test_scheduler.py
+        holds this line to it."""
+        return self.scheduler.select(sorted(self.idle), k, self._rng,
+                                     round_=self.round)
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> list[int]:
@@ -727,14 +741,29 @@ class SeaflServer:
                 self.rate_policy.ratio_for(x, telemetry=self.tel)
         self._gc_history()
 
-        # contributors + top-up to M go back to training on the new model
-        dispatch = list(dict.fromkeys(contributors))
-        for c in dispatch:
-            self.mark_dispatched(c)
-        top_up = self._sample_idle(self.cfg.concurrency - len(self.active))
-        for c in top_up:
-            self.mark_dispatched(c)
-        dispatch += top_up
+        # contributors + top-up to M go back to training on the new model.
+        # Only contributors still idle: a crash replacement (or an eager
+        # scheduler top-up) may have re-dispatched a buffered contributor
+        # between its delivery and this aggregation — re-dispatching it
+        # again would overlap two in-flight rounds for one client.
+        dispatch = [c for c in dict.fromkeys(contributors) if c in self.idle]
+        if self.scheduler.reselect_contributors:
+            # ranked policies: contributors returned to the idle pool at
+            # ingest, so re-select the whole fan-out — the policy, not
+            # delivery order, decides who trains next round (the random
+            # policy keeps the legacy unconditional re-dispatch)
+            dispatch = self._sample_idle(
+                self.cfg.concurrency - len(self.active))
+            for c in dispatch:
+                self.mark_dispatched(c)
+        else:
+            for c in dispatch:
+                self.mark_dispatched(c)
+            top_up = self._sample_idle(
+                self.cfg.concurrency - len(self.active))
+            for c in top_up:
+                self.mark_dispatched(c)
+            dispatch += top_up
 
         return AggregationEvent(
             round=self.round, weights=weights, staleness=staleness,

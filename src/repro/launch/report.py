@@ -400,6 +400,22 @@ def _run_sections(run: Dict[str, Any],
     out.append("<h2>max staleness per round</h2>"
                f'<div class="panel">'
                f'{_spark(_series(rounds, "staleness_max"), xs)}</div>')
+    elig = _series(rounds, "eligible")
+    if any(v is not None for v in elig):
+        # availability/scheduler layer on: online fleet size + dispatches
+        # parked for offline clients, per round (schedule_skew alerts, if
+        # any, appear in the run-monitor alert timeline below)
+        out.append(
+            "<h2>participation: eligible fleet &amp; deferred "
+            "dispatches</h2>"
+            '<div class="panel"><div class="legend">'
+            '<span><span class="key" style="background:var(--series-1)">'
+            "</span>eligible clients</span>"
+            '<span><span class="key" style="background:var(--series-2)">'
+            "</span>deferred dispatches</span></div>"
+            f"{_spark(elig, xs)}<br>"
+            f"{_spark(_series(rounds, 'deferred'), xs, color='var(--series-2)')}"
+            "</div>")
     mem = _series(rounds, "mem_server_array_bytes")
     if any(v is not None for v in mem):
         out.append("<h2>server-resident array bytes</h2>"

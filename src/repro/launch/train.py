@@ -49,7 +49,8 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                 drift_band_ratios=(0.025, 0.05, 0.1),
                 cohorts: str = "off", resync_batching: bool = False,
                 telemetry: bool = False, telemetry_kernels: bool = False,
-                monitor: str = "off", slo=None, monitor_byte_budget=None):
+                monitor: str = "off", slo=None, monitor_byte_budget=None,
+                scheduler: str = "random"):
     cfg = smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg)
     params0 = model.init(jax.random.PRNGKey(seed))
@@ -101,7 +102,8 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                   cohorts=cohorts, resync_batching=resync_batching,
                   telemetry=telemetry, telemetry_kernels=telemetry_kernels,
                   monitor=monitor, slo=slo,
-                  monitor_byte_budget=monitor_byte_budget)
+                  monitor_byte_budget=monitor_byte_budget,
+                  scheduler=scheduler)
     server = SeaflServer(fl, params0, {c.cid: c.n_samples
                                        for c in clients.values()})
 
@@ -142,6 +144,11 @@ def round_record(h: dict, wall: float) -> dict:
     for k, v in h.items():
         if k.startswith("mem_"):
             rec[k] = v
+    # scheduler/availability passthrough (columns exist only when the
+    # layer is on)
+    for k in ("sched_policy", "eligible", "deferred", "sched_max_wait"):
+        if k in h:
+            rec[k] = h[k]
     if "alerts" in h:
         rec["alerts"] = h["alerts"]
     return rec
@@ -337,6 +344,21 @@ def main():
                     metavar="BYTES",
                     help="byte_budget detector threshold on cumulative "
                          "up+down wire bytes")
+    ap.add_argument("--availability", default="always",
+                    choices=["always", "diurnal", "longtail"],
+                    help="client availability model "
+                         "(runtime/simulator.py): per-client renewal "
+                         "processes gate selection, defer dispatches to "
+                         "offline clients, and kill in-flight work on "
+                         "mid-round dropout; 'always' is the legacy "
+                         "always-willing fleet")
+    ap.add_argument("--scheduler", default="random",
+                    choices=["random", "stragglers_last", "rate_staleness"],
+                    help="client-selection policy (runtime/scheduler.py): "
+                         "'random' is the legacy uniform draw; the ranked "
+                         "policies order eligible clients by predicted "
+                         "round time (+ predicted staleness) with "
+                         "fairness aging")
     args = ap.parse_args()
     if args.slo is not None:
         args.monitor = "on"
@@ -365,7 +387,8 @@ def main():
         telemetry=args.telemetry,
         telemetry_kernels=args.telemetry_kernels,
         monitor=args.monitor, slo=args.slo,
-        monitor_byte_budget=args.byte_budget)
+        monitor_byte_budget=args.byte_budget,
+        scheduler=args.scheduler)
 
     ck = None
     if args.ckpt_dir:
@@ -376,7 +399,9 @@ def main():
             server.load_state(extra, trees)
             print(f"[train] restored from round {server.round}")
 
-    sim = FLSimulation(server, clients, SimConfig(seed=args.seed),
+    sim = FLSimulation(server, clients,
+                       SimConfig(seed=args.seed,
+                                 availability=args.availability),
                        eval_fn=eval_fn, eval_every=1)
     t0 = time.time()
     last_ck = server.round

@@ -29,6 +29,8 @@ detector                      fires when
                               mode is on (sharing has collapsed)
 ``resync_storm``              dispatch/mismatch resyncs per round exceed
                               a sustained rate (EF residuals thrashing)
+``schedule_skew``             a scheduler policy has starved an eligible
+                              client past the participation floor
 ============================  =========================================
 
 Each firing emits a typed :class:`Alert` that lands in the history record
@@ -61,6 +63,7 @@ DETECTOR_NAMES = (
     "plateau", "divergence", "staleness_blowup", "straggler_dominance",
     "buffer_starvation", "spill_pressure", "band_saturation",
     "byte_budget", "cohort_fragmentation", "resync_storm",
+    "schedule_skew",
 )
 
 
@@ -126,6 +129,12 @@ class MonitorConfig:
     # --- resync storm: (dispatch.resync + cohort.mismatch_resync) deltas
     resync_window: int = 5
     resync_per_round: float = 2.0
+    # --- schedule skew: participation floor — fire when any *eligible
+    # idle* client has gone this many sim seconds unselected (a ranked
+    # scheduler starving the slow tail; the schedulers' own fairness
+    # floor, Scheduler.fairness_seconds = 60, rotates clients in well
+    # below this, so a firing means the floor was defeated)
+    skew_max_wait: float = 300.0
 
 
 def _quantile(sorted_vals: List[float], q: float) -> float:
@@ -462,7 +471,11 @@ class ResyncStormDetector(Detector):
         if len(self._deltas) < self.cfg.resync_window:
             return []
         rate = sum(self._deltas) / len(self._deltas)
-        if rate >= self.cfg.resync_per_round:
+        # a storm means resyncs land *every* round of the window; a single
+        # burst round (a staleness sync-wait releasing a backlog of buffered
+        # deliveries at once) can carry the same mean without the economics
+        # having inverted
+        if rate >= self.cfg.resync_per_round and min(self._deltas) > 0:
             return self._fire(
                 rec, f"resync storm: {rate:.1f} resyncs/round over the "
                      f"last {len(self._deltas)} rounds "
@@ -472,11 +485,39 @@ class ResyncStormDetector(Detector):
         return []
 
 
+class ScheduleSkewDetector(Detector):
+    """Schedule skew: a ranked scheduler (stragglers_last/rate_staleness)
+    is meant to *delay* slow clients, never to starve them — the
+    schedulers carry a fairness-aging floor precisely so every eligible
+    client keeps participating.  Fires when the simulator's
+    ``sched_max_wait`` column (longest any eligible idle client has gone
+    unselected; offline time excluded, churn is not skew) exceeds the
+    participation floor.  Silent when the column is absent (scheduler
+    layer off)."""
+
+    name = "schedule_skew"
+
+    def observe(self, rec, snap, busy):
+        wait = rec.get("sched_max_wait")
+        if wait is None or int(rec.get("round", 0)) <= self.cfg.warmup_rounds:
+            return []
+        if float(wait) > self.cfg.skew_max_wait:
+            return self._fire(
+                rec, f"schedule skew: an eligible client has waited "
+                     f"{float(wait):.0f}s unselected under "
+                     f"'{rec.get('sched_policy', '?')}' "
+                     f"(floor {self.cfg.skew_max_wait:.0f}s)",
+                max_wait=float(wait),
+                policy=rec.get("sched_policy"),
+                floor=self.cfg.skew_max_wait)
+        return []
+
+
 DETECTOR_CLASSES = (
     AccuracyTrendDetector, StalenessBlowupDetector,
     StragglerDominanceDetector, BufferStarvationDetector,
     SpillPressureDetector, BandSaturationDetector, ByteBudgetDetector,
-    CohortFragmentationDetector, ResyncStormDetector,
+    CohortFragmentationDetector, ResyncStormDetector, ScheduleSkewDetector,
 )
 
 

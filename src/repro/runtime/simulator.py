@@ -31,6 +31,17 @@ slot; maybe aggregates).  With ``bandwidth_model='none'`` the deliver lands
 exactly ``up_latency`` after training ends — byte-count-independent, the
 pre-transport behaviour.
 
+Client *availability* is a third heterogeneity axis
+(``SimConfig.availability``): per-client available/unavailable renewal
+processes (:class:`AvailabilityModel` — ``diurnal`` timezone waves or
+``longtail`` heavy-tailed churn) gate which clients the server's
+scheduler (runtime/scheduler.py) may select, defer dispatches addressed
+to offline clients, and kill in-flight work when a client drops
+mid-round — through the same crash-event machinery as fault injection,
+so version tracking and mid-stream ingest aborts behave identically.
+``availability='always'`` (default) draws no RNG and pushes no events:
+bit-identical to the availability-free simulator, pinned by test.
+
 On a real TPU fleet the same SeaflServer object is driven by the cohort
 scheduler in repro/launch/train.py instead of this simulator.
 """
@@ -74,7 +85,105 @@ class SimConfig:
     encode_mbps: float = 0.0
     fail_prob: float = 0.0             # per-dispatch crash probability
     recover_after: float = 30.0
+    # --- client availability (churn): 'always' keeps every client willing
+    # (legacy, bit-identical); 'diurnal' and 'longtail' run per-client
+    # available/unavailable renewal processes (AvailabilityModel below).
+    # An offline client is ineligible for selection, a dispatch addressed
+    # to it is deferred until it returns, and going offline mid-round
+    # kills the in-flight transfer/training via the crash machinery.
+    availability: str = "always"       # always | diurnal | longtail
+    avail_period: float = 200.0        # diurnal: day length, sim seconds
+    avail_duty: float = 0.5            # diurnal: mean fraction of day online
+    avail_mean_on: float = 120.0       # longtail: mean online stretch
+    avail_mean_off: float = 40.0       # longtail: mean offline stretch
     seed: int = 0
+
+
+AVAILABILITY_MODES = ("always", "diurnal", "longtail")
+
+
+class AvailabilityModel:
+    """Per-client available/unavailable renewal processes (FLGo-style).
+
+    Eligibility state machine as the simulator drives it (the scheduler
+    module documents the same machine from the selection side)::
+
+        available --select--> dispatched --deliver--> available
+        available --toggle--> offline    --toggle--> available
+        dispatched --toggle--> offline-mid-round (in-flight killed via the
+            crash machinery; version tracking dropped) --toggle-->
+            available --select--> full-snapshot re-request
+        dispatch addressed while offline --> deferred --toggle--> dispatched
+
+    Modes:
+
+    ``diurnal``
+        Each client lives on a day of ``avail_period`` sim seconds split
+        into one online window (``avail_duty`` of the day, per-cycle
+        jitter) and one offline window, at a per-client random phase — so
+        the fleet's online population swells and shrinks like a timezone
+        wave instead of toggling in lockstep.
+
+    ``longtail``
+        Online stretches are exponential around ``avail_mean_on``;
+        offline stretches are Pareto-tailed around ``avail_mean_off`` —
+        most disconnections are brief, a heavy tail of devices vanish for
+        many multiples of the mean (the churn analogue of the Pareto
+        speed/bandwidth tails).
+
+    Determinism and restore: every draw comes from a dedicated per-client
+    RNG seeded as ``(sim seed, salt, cid)`` — never the simulator's main
+    stream, so availability changes zero draws in the speed/crash/link
+    streams, and a checkpoint-restored process (whose sim clock restarts
+    at 0, per the existing run() semantics) re-derives the identical
+    toggle schedule from the config alone.  Nothing here is checkpointed.
+    """
+
+    #: seed salt so availability streams never collide with speed/link draws
+    SALT = 0x5EAF1
+
+    def __init__(self, cfg: SimConfig, client_ids):
+        if cfg.availability not in ("diurnal", "longtail"):
+            raise ValueError(
+                f"availability must be one of {AVAILABILITY_MODES}, "
+                f"got {cfg.availability!r}")
+        self.cfg = cfg
+        self.mode = cfg.availability
+        self._rng = {cid: np.random.default_rng((cfg.seed, self.SALT, cid))
+                     for cid in client_ids}
+
+    def _window(self, cid: int, online: bool) -> float:
+        """Length of the next online/offline stretch for ``cid``."""
+        rng, cfg = self._rng[cid], self.cfg
+        if self.mode == "diurnal":
+            base = cfg.avail_period * (cfg.avail_duty if online
+                                       else 1.0 - cfg.avail_duty)
+            return max(1e-3, base * (0.8 + 0.4 * rng.random()))
+        if online:
+            return max(1e-3, rng.exponential(cfg.avail_mean_on))
+        # Pareto(a)+1 has mean a/(a-1); rescale so the stretch averages
+        # avail_mean_off with a heavy right tail
+        a = 1.5
+        return max(1e-3, cfg.avail_mean_off * (a - 1) / a
+                   * (rng.pareto(a) + 1.0))
+
+    def bootstrap(self, cid: int) -> tuple[bool, float]:
+        """Initial (online?, seconds until the first toggle).  The process
+        starts mid-window: online with the mode's stationary probability,
+        a uniform fraction of the way through the current stretch."""
+        rng, cfg = self._rng[cid], self.cfg
+        if self.mode == "diurnal":
+            p_on = cfg.avail_duty
+        else:
+            p_on = cfg.avail_mean_on / (cfg.avail_mean_on
+                                        + cfg.avail_mean_off)
+        online = bool(rng.random() < p_on)
+        remaining = self._window(cid, online) * rng.random()
+        return online, max(1e-3, remaining)
+
+    def next_delay(self, cid: int, online: bool) -> float:
+        """Seconds until the next toggle, given the state just entered."""
+        return self._window(cid, online)
 
 
 @dataclass(order=True)
@@ -98,6 +207,10 @@ class InFlight:
     payload: Any = None           # DispatchPayload on the downlink wire
     arrive_event: Optional[_Event] = None   # payload delivery at t0
     sched: float = 0.0            # dispatch scheduled (encode + wire start)
+    # pending crash draw for this dispatch (training- or download-window),
+    # so an availability kill can void it — else the stale fail event
+    # would spuriously kill the client's *next* dispatch
+    fail_event: Optional[_Event] = None
 
 
 class FLSimulation:
@@ -151,6 +264,30 @@ class FLSimulation:
         elif sim_cfg.bandwidth_model != "none":
             raise ValueError(
                 f"unknown bandwidth_model {sim_cfg.bandwidth_model!r}")
+        # --- client availability + scheduling state.  With
+        # availability='always' none of this draws RNG or pushes events —
+        # the legacy stream and heap stay bit-identical (pinned).
+        self.avail: Optional[AvailabilityModel] = None
+        self._offline: set[int] = set()     # currently-unavailable clients
+        self._deferred: set[int] = set()    # dispatches parked until return
+        self._crashed: set[int] = set()     # crash-recovery pending
+        self._transfer_fail: dict[int, _Event] = {}  # pending uplink crash
+        self.deferrals = 0                  # cumulative deferred dispatches
+        # history grows sched columns only when the layer is exercised, so
+        # default-config history keys stay exactly the PR 8 set
+        self._sched_cols = (sim_cfg.availability != "always"
+                            or server.cfg.scheduler != "random")
+        if sim_cfg.availability != "always":
+            self.avail = AvailabilityModel(sim_cfg, sorted(clients))
+            # the scheduler filters every selection through this oracle
+            server.scheduler.bind_availability(
+                lambda cid: cid not in self._offline)
+            for cid in sorted(clients):
+                online, delay = self.avail.bootstrap(cid)
+                if not online:
+                    self._offline.add(cid)
+                self._push(delay, "avail_off" if online else "avail_on",
+                           cid=cid)
 
     # ------------------------------------------------------------ timing
     def _idle_gap(self) -> float:
@@ -197,8 +334,32 @@ class FLSimulation:
         return ev
 
     # ---------------------------------------------------------- dispatch
+    def _maybe_defer(self, cid: int) -> bool:
+        """Park a dispatch addressed to an offline client: it stays in
+        ``_deferred`` until its renewal process brings it back (the
+        avail_on handler then re-marks and dispatches it on the
+        then-current global, if a concurrency slot is still free).  The
+        client leaves ``server.active`` while parked — it holds no
+        in-flight work, so the SEAFL sync-wait must not hold aggregation
+        hostage to an offline stretch, and its slot refills immediately
+        from the eligible pool.  Always False with availability off."""
+        if self.avail is None or cid not in self._offline:
+            return False
+        self._deferred.add(cid)
+        self.deferrals += 1
+        self.tel.counter("sched.deferrals")
+        self.tel.sim_instant("defer", self.now, track=f"client{cid}")
+        self.server.active.pop(cid, None)
+        self._top_up()
+        return True
+
     def _dispatch(self, cid: int, payload=None,
                   encode_delay: Optional[float] = None):
+        # defensive deferral: selection already filters offline clients,
+        # but contributor re-dispatches and restored actives can address
+        # a client that went offline since the server decided
+        if self._maybe_defer(cid):
+            return
         E = self.server.cfg.local_epochs
         # raw/full payload chunks are never read here (the training base is
         # reconstructed server-side), so skip materialising them
@@ -237,6 +398,7 @@ class FLSimulation:
         # *next* dispatch after recovery.  No draws with the model off —
         # the legacy RNG stream stays untouched.
         down = t0 - self.now
+        fail_ev = train_fail
         if (self._down_bw is not None and self.cfg.fail_prob > 0
                 and down > 0):
             train_window = max(ends[-1] - t0, 1e-9)
@@ -244,8 +406,8 @@ class FLSimulation:
             if self._rng.random() < p_down:
                 if train_fail is not None:
                     train_fail.valid = False
-                self._push(self.now + self._rng.uniform(0, down),
-                           "fail", cid=cid)
+                fail_ev = self._push(self.now + self._rng.uniform(0, down),
+                                     "fail", cid=cid)
         # the payload lands at t0: version tracking + downlink byte
         # accounting commit then, whether or not the client survives the
         # training that follows
@@ -254,7 +416,7 @@ class FLSimulation:
         self._inflight[cid] = InFlight(
             cid=cid, version=self.server.round, epoch_ends=ends,
             upload_event=ev, n_epochs_at_upload=E, t0=t0, payload=payload,
-            arrive_event=arrive, sched=self.now)
+            arrive_event=arrive, sched=self.now, fail_event=fail_ev)
 
     def _notify(self, cid: int):
         """Server NOTIFY (SEAFL², Algorithm 2): arrives after down link."""
@@ -298,7 +460,7 @@ class FLSimulation:
         up_time = self._up_time(cid, payload.nbytes)
         self._delivering[cid] = self._push(
             self.now + up_time, "deliver", cid=cid, payload=payload,
-            loss=loss, up_t0=self.now)
+            loss=loss, up_t0=self.now, sched_t0=fl.sched)
         # Under the bandwidth model slow transfers can dominate a client's
         # lifetime, so they must be organically crashable too: the dispatch
         # draw covered the training window at full fail_prob; allocate the
@@ -311,14 +473,21 @@ class FLSimulation:
             train_time = max(self.now - fl.t0, 1e-9)
             p_transfer = self.cfg.fail_prob * up_time / (up_time + train_time)
             if self._rng.random() < p_transfer:
-                self._push(self.now + self._rng.uniform(0, up_time),
-                           "fail", cid=cid)
+                self._transfer_fail[cid] = self._push(
+                    self.now + self._rng.uniform(0, up_time),
+                    "fail", cid=cid)
 
     def _handle_deliver(self, cid: int, payload, loss: float,
-                        up_t0: Optional[float] = None):
+                        up_t0: Optional[float] = None,
+                        sched_t0: Optional[float] = None):
         """The last wire chunk landed: the server ingests the payload into
         its (K, P) buffer slot and may aggregate."""
         self._delivering.pop(cid, None)
+        self._transfer_fail.pop(cid, None)
+        if sched_t0 is not None:
+            # the client's full dispatch->deliver round time is the
+            # scheduler's rate feature (a no-op under the random policy)
+            self.server.scheduler.observe_round(cid, self.now - sched_t0)
         if up_t0 is not None:
             self.tel.sim_span("upload", up_t0, self.now,
                               track=f"client{cid}", bytes=payload.nbytes,
@@ -327,10 +496,20 @@ class FLSimulation:
         agg = self.server.ingest_payload(payload, recv_time=self.now)
         if agg is not None:
             self._on_aggregation(agg, loss)
+        if self.server.scheduler.reselect_contributors:
+            # ranked policies dispatch eagerly on every delivery instead
+            # of waiting for the aggregation wave: the freed slot refills
+            # with the best eligible client immediately, so arrivals stay
+            # staggered (a synchronized wave's cadence is its slowest
+            # member; a staggered pool pipelines)
+            self._top_up()
 
     def _on_aggregation(self, agg, last_loss: float):
         self.tel.sim_instant("aggregate", self.now, track="server",
                              round=agg.round, k=len(agg.contributors))
+        # aggregation cadence is the scheduler's staleness-prediction
+        # denominator (no-op under the random policy)
+        self.server.scheduler.observe_aggregation(agg.round, self.now)
         rec = {"time": self.now, "round": agg.round,
                "staleness_mean": float(np.mean(agg.staleness)),
                "staleness_max": float(np.max(agg.staleness)),
@@ -343,6 +522,20 @@ class FLSimulation:
         if cs is not None:
             rec["cohorts"] = cs["cohorts"]
             rec["edge_partials"] = cs["edge_partials"]
+        if self._sched_cols:
+            # participation columns (only when the availability/scheduler
+            # layer is exercised, so default history keys are unchanged):
+            # eligible = online fleet size, deferred = dispatches currently
+            # parked, sched_max_wait = the longest any *eligible idle*
+            # client has gone unselected (the skew detector's evidence —
+            # offline waits are churn, not scheduler starvation)
+            rec["sched_policy"] = self.server.scheduler.policy
+            rec["eligible"] = len(self.clients) - len(self._offline)
+            rec["deferred"] = len(self._deferred)
+            elig_idle = [c for c in sorted(self.server.idle)
+                         if c not in self._offline]
+            wait, _ = self.server.scheduler.max_wait(elig_idle)
+            rec["sched_max_wait"] = round(wait, 1)
         if self.eval_fn is not None and (agg.round % self.eval_every == 0):
             rec["acc"] = float(self.eval_fn(self.server.params))
         if self.tel.enabled:
@@ -365,25 +558,75 @@ class FLSimulation:
         self.history.append(rec)
         for cid in agg.notify:
             self._notify(cid)
+        # defer before encoding: a dispatch addressed to a client that went
+        # offline since the server decided is parked, and under resync
+        # batching must not waste an encode (or churn its EF) on a payload
+        # that will never ship
+        targets = [c for c in agg.dispatch if not self._maybe_defer(c)]
         if (self.server.cfg.resync_batching
-                and self.server.dispatch is not None and agg.dispatch):
+                and self.server.dispatch is not None and targets):
             # resync batching: encode the whole fan-out in one pass —
             # cached hops fan out as usual while every personalized resync
             # fold coalesces into one batched encode whose source cost is
             # priced once and overlapped across the resynced clients
             payloads, fold_cost = self.server.encode_dispatch_round(
-                agg.dispatch, materialize=False)
+                targets, materialize=False)
             batch_enc = 0.0
             if self.cfg.encode_mbps > 0 and fold_cost:
                 batch_enc = fold_cost * 8.0 / (self.cfg.encode_mbps * 1e6)
                 self.encode_seconds += batch_enc
-            for cid, p in zip(agg.dispatch, payloads):
+            for cid, p in zip(targets, payloads):
                 self._dispatch(cid, payload=p,
                                encode_delay=(batch_enc if p.batched
                                              else None))
         else:
-            for cid in agg.dispatch:
+            for cid in targets:
                 self._dispatch(cid)
+
+    # ------------------------------------------------------------- faults
+    def _kill_inflight(self, cid: int, instant: Optional[str] = None) -> bool:
+        """Kill whatever ``cid`` has in flight — pending dispatch/training
+        (upload + arrive events, so an undelivered payload dies on the
+        wire and the client re-requests a full snapshot later) or a
+        mid-transfer upload (deliver event) — plus any pending crash draw
+        for it, so a stale fail event can't kill a future dispatch.  Used
+        by both the crash path and an availability model taking the client
+        offline mid-round.  Returns True if anything was in flight."""
+        fl = self._inflight.pop(cid, None)
+        deliver = self._delivering.pop(cid, None)
+        tf = self._transfer_fail.pop(cid, None)
+        if tf is not None:
+            tf.valid = False
+        # a crash mid-*transfer* (after training, before the last wire
+        # chunk lands) kills the in-flight payload too — the encode-time
+        # EF residual update stands, like a real client whose send died
+        # after it updated local error memory
+        if deliver is not None:
+            deliver.valid = False
+        if fl is None and deliver is None:
+            return False
+        if instant is not None:
+            self.tel.sim_instant(instant, self.now, track=f"client{cid}")
+        if fl is not None:
+            fl.upload_event.valid = False
+            if fl.fail_event is not None:
+                fl.fail_event.valid = False
+            # a kill inside the dispatch window voids the downlink
+            # payload: it is never delivered and the client re-requests a
+            # full snapshot when it next trains
+            if fl.arrive_event is not None:
+                fl.arrive_event.valid = False
+        for c in self.server.mark_failed(cid):
+            self._dispatch(c)
+        return True
+
+    def _top_up(self):
+        """Fill spare concurrency slots from the eligible idle pool (used
+        when a returning client re-grows the pool)."""
+        spare = self.server.cfg.concurrency - len(self.server.active)
+        for c in self.server._sample_idle(spare):
+            self.server.mark_dispatched(c)
+            self._dispatch(c)
 
     # --------------------------------------------------------------- run
     def run(self, max_time: float = 1e9, max_rounds: int = 10_000,
@@ -429,35 +672,58 @@ class FLSimulation:
             elif ev.kind == "deliver":
                 self._handle_deliver(ev.data["cid"], ev.data["payload"],
                                      ev.data["loss"],
-                                     ev.data.get("up_t0"))
+                                     ev.data.get("up_t0"),
+                                     ev.data.get("sched_t0"))
             elif ev.kind == "notify":
                 self._handle_notify(ev.data["cid"])
             elif ev.kind == "fail":
                 cid = ev.data["cid"]
-                fl = self._inflight.pop(cid, None)
-                # a crash mid-*transfer* (after training, before the last
-                # wire chunk lands) kills the in-flight payload too — the
-                # encode-time EF residual update stands, like a real client
-                # whose send died after it updated local error memory
-                deliver = self._delivering.pop(cid, None)
-                if deliver is not None:
-                    deliver.valid = False
-                if fl is not None or deliver is not None:
-                    self.tel.sim_instant("crash", self.now,
-                                         track=f"client{cid}")
-                    if fl is not None:
-                        fl.upload_event.valid = False
-                        # a crash inside the dispatch window kills the
-                        # downlink payload: it is never delivered and the
-                        # client re-requests a full snapshot on recovery
-                        if fl.arrive_event is not None:
-                            fl.arrive_event.valid = False
-                    for c in self.server.mark_failed(cid):
-                        self._dispatch(c)
+                if self._kill_inflight(cid, instant="crash"):
+                    self._crashed.add(cid)
                     self._push(self.now + self.cfg.recover_after,
                                "recover", cid=cid)
             elif ev.kind == "recover":
+                self._crashed.discard(ev.data["cid"])
                 self.server.recover(ev.data["cid"])
+            elif ev.kind == "avail_off":
+                cid = ev.data["cid"]
+                self._offline.add(cid)
+                self.tel.sim_instant("offline", self.now,
+                                     track=f"client{cid}")
+                # going offline mid-round kills the in-flight
+                # transfer/training exactly like a crash: tracking drops,
+                # the return dispatch ships a full snapshot
+                self._kill_inflight(cid)
+                self._push(self.now + self.avail.next_delay(cid, False),
+                           "avail_on", cid=cid)
+            elif ev.kind == "avail_on":
+                cid = ev.data["cid"]
+                self._offline.discard(cid)
+                self.tel.sim_instant("online", self.now,
+                                     track=f"client{cid}")
+                self._push(self.now + self.avail.next_delay(cid, True),
+                           "avail_off", cid=cid)
+                if cid in self._deferred:
+                    self._deferred.discard(cid)
+                    if (len(self.server.active)
+                            < self.server.cfg.concurrency):
+                        # the parked dispatch goes out now, re-marked
+                        # against the current global (tracking stayed
+                        # honest: the old decision's version was never
+                        # delivered)
+                        self.server.mark_dispatched(cid)
+                        self.server.scheduler.note_dispatched(cid)
+                        self._dispatch(cid)
+                    else:
+                        # its slot was refilled while it was away: the
+                        # promise lapses, the client rejoins the pool
+                        self.server.recover(cid)
+                elif cid not in self._crashed:
+                    # back in the pool (crash recovery, if pending, keeps
+                    # its own clock); spare concurrency refills from the
+                    # now-larger eligible pool
+                    self.server.recover(cid)
+                    self._top_up()
             if target_acc is not None and self.history:
                 accs = [h.get("acc", 0.0) for h in self.history]
                 if accs and max(accs) >= target_acc:

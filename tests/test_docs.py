@@ -1,0 +1,69 @@
+"""Doc-drift gates: the docs must track the code, enforced in tier-1.
+
+Documentation that silently lags the CLI is worse than none — it teaches
+wrong invocations.  These tests pin the load-bearing surfaces:
+
+  * every ``--flag`` defined in ``launch/train.py``'s argparse appears in
+    README.md (so a new flag lands with its one-line documentation in the
+    same PR);
+  * the README quotes ROADMAP.md's exact tier-1 and ``--runslow``
+    commands (one canonical invocation, not three drifting variants);
+  * ``docs/ARCHITECTURE.md`` exists, is linked from the README, and still
+    names every runtime module it claims to map.
+
+Pure text checks — no jax, no model builds — so they cost milliseconds.
+"""
+
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+README = (REPO / "README.md").read_text()
+ROADMAP = (REPO / "ROADMAP.md").read_text()
+TRAIN = (REPO / "src" / "repro" / "launch" / "train.py").read_text()
+
+
+def train_flags():
+    flags = re.findall(r'add_argument\(\s*"(--[a-z0-9-]+)"', TRAIN)
+    assert len(flags) >= 30, "argparse extraction regex broke"
+    return flags
+
+
+def test_every_train_flag_documented_in_readme():
+    missing = [f for f in train_flags() if f not in README]
+    assert not missing, (
+        f"train.py flags undocumented in README.md: {missing} — add each "
+        "to the CLI reference table (and its section, if it has one)")
+
+
+def test_readme_quotes_canonical_test_commands():
+    # the single source of truth for how to run the suite is ROADMAP.md;
+    # the README must quote it verbatim, not a paraphrase that drifts
+    tier1 = "PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q"
+    runslow = ("PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} "
+               "python -m pytest -q --runslow")
+    for cmd in (tier1, runslow):
+        assert cmd in ROADMAP, f"ROADMAP.md lost the canonical command {cmd!r}"
+        assert cmd in README, f"README.md does not quote {cmd!r} verbatim"
+
+
+def test_architecture_map_exists_and_is_linked():
+    arch_path = REPO / "docs" / "ARCHITECTURE.md"
+    assert arch_path.exists(), "docs/ARCHITECTURE.md missing"
+    assert "docs/ARCHITECTURE.md" in README, (
+        "README.md must link the architecture map")
+    arch = arch_path.read_text()
+    for mod in ("scheduler", "simulator", "monitor", "telemetry",
+                "dispatch", "transport", "codecs", "cohorts", "policy",
+                "packer", "buffer"):
+        assert f"runtime/{mod}" in arch or f"core/{mod}" in arch, (
+            f"ARCHITECTURE.md no longer names the {mod} module")
+
+
+def test_architecture_cites_real_tests():
+    # every `tests/test_*.py` the map cites as a pin must still exist
+    arch = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    cited = set(re.findall(r"tests/(test_\w+\.py)", arch))
+    assert cited, "ARCHITECTURE.md cites no pinning tests"
+    stale = [t for t in sorted(cited) if not (REPO / "tests" / t).exists()]
+    assert not stale, f"ARCHITECTURE.md cites deleted tests: {stale}"

@@ -256,6 +256,17 @@ def test_resync_storm_fires_alone():
     assert fired[0].evidence["resyncs_per_round"] >= mon.cfg.resync_per_round
 
 
+def test_resync_burst_stays_quiet():
+    # one burst round (sync-wait backlog committing at once) carries the
+    # same window mean as a storm but is not one: resyncs must land every
+    # round of the window to fire
+    mon = RunMonitor()
+    recs = [healthy_rec(r, telemetry={
+        "counters": {"dispatch.resync": 25.0 if r >= 4 else 0.0}})
+        for r in range(1, 12)]
+    assert feed(mon, recs) == []
+
+
 def test_alert_shape_and_summary():
     mon = RunMonitor(config=MonitorConfig(byte_budget=10), slo="error")
     feed(mon, [healthy_rec(1)])

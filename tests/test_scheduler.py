@@ -1,0 +1,288 @@
+"""Scheduling layer: policy ranking, availability churn, bit-identity pin.
+
+The load-bearing test here is the legacy pin: with the default config
+(``availability='always'``, ``scheduler='random'``) the scheduler layer
+must be invisible — same RNG stream, same event times, same history keys
+as the pre-scheduler simulator.  Everything else exercises the layer when
+it is actually on: eligibility filtering, deferral, offline-mid-round
+kills, fairness, and the ranked policies' prediction machinery.
+"""
+import types
+
+import numpy as np
+import pytest
+
+from repro.core.server import FLConfig
+from repro.experiment import ExperimentConfig, build_experiment, run_experiment
+from repro.runtime.scheduler import (
+    RandomScheduler, RateStalenessScheduler, SCHEDULERS,
+    StragglersLastScheduler, make_scheduler)
+from repro.runtime.simulator import AvailabilityModel, SimConfig
+
+
+def tiny_cfg(algorithm="seafl", fl_kw=None, **sim_kw):
+    fl = FLConfig(algorithm=algorithm, n_clients=12, concurrency=6,
+                  buffer_size=3, staleness_limit=4, local_epochs=2,
+                  local_lr=0.05, batch_size=16, seed=3, **(fl_kw or {}))
+    sim = SimConfig(speed_model="pareto", base_epoch_time=1.0, seed=3,
+                    **sim_kw)
+    return ExperimentConfig(dataset="tiny", n_train=600, n_test=120,
+                            model="mlp", fl=fl, sim=sim, seed=3)
+
+
+# ------------------------------------------------------------ legacy pin
+def _legacy_sample_idle(self, k):
+    # the pre-scheduler inline draw, verbatim (git history): the default
+    # RandomScheduler must consume self._rng exactly like this
+    pool = sorted(self.idle)
+    if not pool or k <= 0:
+        return []
+    pick = self._rng.choice(len(pool), size=min(k, len(pool)),
+                            replace=False)
+    return [pool[i] for i in pick]
+
+
+def test_default_config_bit_identical_to_legacy_sampler():
+    """availability='always' + scheduler='random' must replay the legacy
+    simulator bit-for-bit: identical history and identical final RNG
+    states vs the historic inline idle-pool draw."""
+    cfg = tiny_cfg(fail_prob=0.1, bandwidth_model="pareto")
+    sim1, _, _ = build_experiment(cfg)
+    h1 = sim1.run(max_rounds=8)
+    sim2, _, _ = build_experiment(cfg)
+    sim2.server._sample_idle = types.MethodType(_legacy_sample_idle,
+                                                sim2.server)
+    h2 = sim2.run(max_rounds=8)
+    assert len(h1) == len(h2)
+    for a, b in zip(h1, h2):
+        assert a["time"] == b["time"]
+        assert a["round"] == b["round"]
+        assert a["bytes"] == b["bytes"]
+        np.testing.assert_array_equal(a.get("acc", 0), b.get("acc", 0))
+    assert (sim1._rng.bit_generator.state
+            == sim2._rng.bit_generator.state)
+    assert (sim1.server._rng.bit_generator.state
+            == sim2.server._rng.bit_generator.state)
+
+
+def test_default_history_has_no_sched_columns():
+    _, hist = run_experiment(tiny_cfg(), max_rounds=4)
+    for h in hist:
+        for key in ("sched_policy", "eligible", "deferred",
+                    "sched_max_wait"):
+            assert key not in h
+
+
+def test_sched_columns_present_when_layer_on():
+    _, hist = run_experiment(
+        tiny_cfg(fl_kw={"scheduler": "rate_staleness"}), max_rounds=4)
+    assert hist
+    for h in hist:
+        assert h["sched_policy"] == "rate_staleness"
+        assert h["eligible"] == 12            # availability off: everyone
+        assert h["deferred"] == 0
+        assert h["sched_max_wait"] >= 0.0
+
+
+def test_unknown_policy_and_availability_raise():
+    with pytest.raises(ValueError, match="scheduler"):
+        make_scheduler("bogus")
+    with pytest.raises(ValueError, match="scheduler"):
+        build_experiment(tiny_cfg(fl_kw={"scheduler": "bogus"}))
+    with pytest.raises(ValueError, match="availability"):
+        build_experiment(tiny_cfg(availability="bogus"))
+
+
+# ------------------------------------------------------------ renewal RNG
+def test_availability_renewal_deterministic_across_rebuilds():
+    cfg = SimConfig(availability="longtail", seed=7)
+    a = AvailabilityModel(cfg, range(6))
+    b = AvailabilityModel(cfg, range(6))
+    for cid in range(6):
+        assert a.bootstrap(cid) == b.bootstrap(cid)
+        assert a.next_delay(cid, True) == b.next_delay(cid, True)
+        assert a.next_delay(cid, False) == b.next_delay(cid, False)
+
+
+def test_churn_run_replays_deterministically():
+    cfg = tiny_cfg(availability="diurnal", avail_period=30.0,
+                   avail_duty=0.5)
+    _, h1 = run_experiment(cfg, max_rounds=6)
+    _, h2 = run_experiment(cfg, max_rounds=6)
+    assert [h["time"] for h in h1] == [h["time"] for h in h2]
+    assert [h["eligible"] for h in h1] == [h["eligible"] for h in h2]
+
+
+# ---------------------------------------------------- offline-mid-round
+def test_offline_mid_download_kills_payload_and_forces_full_resync():
+    """A client dropping mid-round voids the in-flight payload (arrive +
+    upload events die on the wire), drops its version tracking, and its
+    next dispatch ships a full snapshot."""
+    cfg = tiny_cfg(fl_kw={"dispatch_compression": "topk:0.1",
+                          "dispatch_history": 8})
+    sim, _, _ = build_experiment(cfg)
+    cids = sim.server.start()
+    for c in cids:
+        sim._dispatch(c)
+    cid = cids[0]
+    fl = sim._inflight[cid]
+    # the downlink payload lands: version tracking commits
+    sim.server.deliver_dispatch(cid, fl.payload)
+    assert cid in sim.server.dispatch.versions
+    assert sim._kill_inflight(cid)
+    # in-flight events are void, tracking dropped
+    assert fl.arrive_event.valid is False
+    assert fl.upload_event.valid is False
+    assert cid not in sim._inflight
+    assert cid not in sim.server.dispatch.versions
+    # the re-request cannot delta against dropped tracking
+    assert sim.server.encode_dispatch(cid, materialize=False).full
+
+
+def test_offline_dispatch_is_deferred_and_slot_refills():
+    cfg = tiny_cfg(availability="longtail")
+    sim, _, _ = build_experiment(cfg)
+    cid = 0
+    sim._offline.add(cid)
+    sim.server.mark_dispatched(cid)
+    before = sim.deferrals
+    sim._dispatch(cid)
+    assert cid in sim._deferred
+    assert sim.deferrals == before + 1
+    assert cid not in sim.server.active       # parked, holds no slot
+    assert cid not in sim._inflight
+
+
+@pytest.mark.parametrize("policy", ["random", "rate_staleness"])
+def test_churn_training_progresses(policy):
+    """Aggressive longtail churn + crashes: offline-mid-round kills happen
+    and the run still makes progress (no deadlock, no double-dispatch
+    KeyError — the random case is the regression config where a buffered
+    contributor was once re-dispatched twice).  Only the random policy
+    defers: its legacy contributor re-dispatch can address a client that
+    went offline since the server decided, while ranked reselection
+    filters offline clients out of every pick."""
+    cfg = tiny_cfg(availability="longtail", avail_mean_on=8.0,
+                   avail_mean_off=8.0, fail_prob=0.05,
+                   bandwidth_model="pareto",
+                   fl_kw={"scheduler": policy})
+    sim, hist = run_experiment(cfg, max_rounds=20, max_time=500)
+    assert len(hist) >= 3
+    if policy == "random":
+        assert sim.deferrals > 0
+    # protocol invariants survived the churn
+    assert set(sim.server.active).isdisjoint(sim.server.idle)
+    assert len(sim.server.active) <= sim.server.cfg.concurrency
+
+
+def test_no_starvation_under_ranked_policy():
+    """stragglers_last delays slow clients but the fairness floor must
+    rotate every one of them in: each client is selected eventually."""
+    cfg = tiny_cfg(fl_kw={"scheduler": "stragglers_last"})
+    sim, _, _ = build_experiment(cfg)
+    sim.server.scheduler.fairness_seconds = 10.0
+    sim.run(max_rounds=30)
+    sched = sim.server.scheduler
+    assert set(sched._last_sel) == set(range(12))
+    # and nobody is left waiting past the detector's floor
+    wait, _ = sched.max_wait(sorted(sim.server.idle))
+    assert wait < 300.0
+
+
+# ------------------------------------------------------- ranked policies
+def test_fairness_jump_overrides_ranking():
+    s = StragglersLastScheduler()
+    s._now = 100.0
+    for c in range(4):
+        s.observe_round(c, float(10 * (c + 1)))   # 3 is the slowest
+        s._elig_since[c] = 0.0                    # eligible all along
+        s._last_sel[c] = 99.0
+    s._last_sel[3] = 0.0                          # ...and starved
+    picked = s.select([0, 1, 2, 3], 2, np.random.default_rng(0))
+    assert picked[0] == 3                         # jumps the queue
+    assert picked[1] == 0                         # then fastest-first
+
+
+def test_rate_staleness_veto_leaves_slot_empty():
+    s = RateStalenessScheduler()
+    s._now = 10.0
+    s._agg_gap = 1.0                  # 1 s between aggregations
+    s.observe_round(0, 1.0)           # s_hat = 1, fine
+    s.observe_round(1, 100.0)         # s_hat = 100 > cut: vetoed
+    for c in (0, 1):
+        s._last_sel[c] = 10.0
+    picked = s.select([0, 1], 2, np.random.default_rng(0))
+    assert picked == [0]              # the slot stays empty, not filled
+    # liveness: when everyone is vetoed the policy still serves someone
+    s.observe_round(0, 100.0)
+    s.observe_round(0, 100.0)
+    assert s.select([0, 1], 1, np.random.default_rng(0)) != []
+
+
+def test_random_policy_matches_legacy_draw_unit():
+    pool = list(range(10))
+    r1 = np.random.default_rng(5)
+    r2 = np.random.default_rng(5)
+    picked = RandomScheduler().select(pool, 4, r1)
+    pick = r2.choice(len(pool), size=4, replace=False)
+    assert picked == [pool[i] for i in pick]
+    assert r1.bit_generator.state == r2.bit_generator.state
+
+
+def test_eligible_time_resets_after_offline_stretch():
+    s = RandomScheduler()
+    offline = set()
+    s.bind_availability(lambda c: c not in offline)
+    s.observe_aggregation(0, 50.0)
+    s.eligible([0, 1])                # both eligible since t=50
+    offline.add(1)
+    s.observe_aggregation(1, 120.0)
+    s.eligible([0, 1])                # 1 marked offline
+    offline.discard(1)
+    s.observe_aggregation(2, 200.0)
+    s.eligible([0, 1])                # 1 back: clock resets to t=200
+    assert s.wait_of(0) == 150.0
+    assert s.wait_of(1) == 0.0
+
+
+# -------------------------------------------------- telemetry + restore
+def test_rank_timer_and_deferral_counters():
+    cfg = tiny_cfg(availability="longtail", avail_mean_on=8.0,
+                   avail_mean_off=8.0,
+                   fl_kw={"scheduler": "rate_staleness",
+                          "telemetry": True})
+    sim, hist = run_experiment(cfg, max_rounds=8, max_time=400)
+    counters = sim.tel.snapshot()["counters"]
+    assert counters.get("sched.rank_ms", 0.0) > 0.0
+    if sim.deferrals:
+        assert counters["sched.deferrals"] == sim.deferrals
+
+
+def test_checkpoint_restore_mid_unavailability_deterministic(tmp_path):
+    """Checkpoint while part of the fleet is offline, restore into a fresh
+    process: the run resumes (scheduler state re-warms, availability
+    re-derives from config) and the continuation is deterministic."""
+    from repro.checkpoint import Checkpointer
+
+    cfg = tiny_cfg(availability="longtail", avail_mean_on=8.0,
+                   avail_mean_off=8.0,
+                   fl_kw={"scheduler": "stragglers_last"})
+    sim, _ = run_experiment(cfg, max_rounds=5)
+    server = sim.server
+    ck = Checkpointer(str(tmp_path), keep=1, async_save=False)
+    ck.save(server.round, server.checkpoint_trees(),
+            extra=server.state_dict())
+
+    def resume():
+        sim2, _, _ = build_experiment(cfg)
+        _, trees, extra = ck.restore(
+            like={f"v{v}": server._history[v] for v in server._history})
+        sim2.server.load_state(extra, trees)
+        hist = sim2.run(max_rounds=sim2.server.round + 4)
+        return sim2, hist
+
+    sim_a, hist_a = resume()
+    sim_b, hist_b = resume()
+    assert sim_a.server.round >= server.round + 4 or len(hist_a) > 0
+    assert [h["time"] for h in hist_a] == [h["time"] for h in hist_b]
+    assert [h["round"] for h in hist_a] == [h["round"] for h in hist_b]
