@@ -72,3 +72,20 @@ def run(cfg: ExperimentConfig, max_rounds=ROUND_CAP, target=None,
 
 def csv_line(name, value, derived=""):
     print(f"{name},{value},{derived}", flush=True)
+
+
+def bench_header() -> dict:
+    """Machine provenance for every BENCH_*.json: the chip the numbers were
+    measured on, the jax that measured them, and the tuning-cache key
+    prefix they would resolve against — so baselines from different
+    machines are visibly incomparable instead of silently diffed."""
+    import jax
+    from repro.runtime.autotune import (
+        CACHE_VERSION, cache_key_prefix, device_kind,
+    )
+    return {
+        "device_kind": device_kind(),
+        "jax_version": jax.__version__,
+        "tuning_cache_version": CACHE_VERSION,
+        "tuning_cache_key": cache_key_prefix(),
+    }

@@ -14,7 +14,12 @@ per-round wall clock must not regress >20% over baseline.  The scheduler
 sweep (``--only sched``, ``BENCH_sched.json``) carries its own
 within-report gate (``_gate_sched``): the ranked ``rate_staleness``
 policy's mean time-to-accuracy must beat ``random``'s on every
-availability scenario.  Non-throughput fields (wire bytes, hit rates, speedup ratios)
+availability scenario.  The autotuner sweep (``BENCH_kernels.json``,
+written by the same ``--only wire`` run) is gated by ``_gate_kernels``:
+the measured winner must beat the hardcoded default on every swept
+(entry point, dtype, P) cell, and tuned wall time must stay within the
+20% band of its committed baseline.
+Non-throughput fields (wire bytes, hit rates, speedup ratios)
 are reported in the delta table but never gate: byte counts are asserted
 exactly by the test suite, and ratios are derived from the gated numbers.
 
@@ -42,7 +47,7 @@ import sys
 BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 BASELINE_DIR = os.path.join(BENCH_DIR, "baselines")
 FILES = ("BENCH_ingest.json", "BENCH_dispatch.json", "BENCH_fleet.json",
-         "BENCH_sched.json")
+         "BENCH_sched.json", "BENCH_kernels.json")
 THRESHOLD = 0.20          # fail below (1 - THRESHOLD) x baseline
 OBS_OVERHEAD_MAX_PCT = 5.0     # telemetry-on slowdown allowed on hot paths
 FLEET_STATE_GROWTH_MAX = 3.0   # cohort state across the 10^2..10^5 sweep
@@ -52,18 +57,22 @@ FLEET_WALL_GATE_SIZE = "10000"  # the sweep point wall-clock gated vs base
 # metric keys gated per schemes[...] entry, by file
 GATED = {
     "BENCH_ingest.json": (
-        "ingest_MBps", "ingest_MBps_coalesced", "stream_batched_MBps"),
+        "ingest_MBps", "ingest_MBps_coalesced", "stream_batched_MBps",
+        "stream_tuned_MBps"),
     "BENCH_dispatch.json": ("apply_MBps",),
     "BENCH_fleet.json": (),   # gated via _gate_fleet, not per-scheme keys
     "BENCH_sched.json": (),   # gated via _gate_sched, not per-scheme keys
+    "BENCH_kernels.json": (),  # gated via _gate_kernels (lower-is-better us)
 }
 # informational (never gating) keys shown in the table when present
 INFO = {
     "BENCH_ingest.json": ("batch_flush_speedup", "coalesce_speedup",
-                          "stream_auto_MBps", "auto_vs_batched_speedup"),
+                          "stream_auto_MBps", "auto_vs_batched_speedup",
+                          "tuned_flush_speedup"),
     "BENCH_dispatch.json": (),
     "BENCH_fleet.json": (),
     "BENCH_sched.json": (),
+    "BENCH_kernels.json": (),
 }
 
 
@@ -326,6 +335,55 @@ def _gate_sched(data: dict, rows: list, failures: list) -> None:
                      "ok" if ok else "REGRESSED"))
 
 
+def _gate_kernels(data: dict, base: dict, rows: list, failures: list,
+                  threshold: float = THRESHOLD) -> None:
+    """Gate the autotuner sweep report (BENCH_kernels.json).
+
+    Two invariants per swept (entry point, dtype, P) cell:
+
+      * within-report: the measured winner must be at least as fast as the
+        hardcoded default (``tuned_speedup >= 1``).  Winner selection is by
+        measured minimum over a candidate set that *includes* the default,
+        so a losing tuned config means the sweep machinery itself broke —
+        not a noisy chip;
+      * vs baseline: ``tuned_us`` is lower-is-better wall time, so the
+        generic throughput loop does not apply — the current tuned time
+        must stay within (1 + threshold) x the committed baseline.
+    """
+    cells = data.get("cells")
+    if not cells:
+        failures.append("kernels/cells: section missing from the current "
+                        "report (did bench_kernel_sweep change?)")
+        return
+    base_cells = base.get("cells", {})
+    for key in sorted(cells):
+        cell = cells[key]
+        sp = cell.get("tuned_speedup")
+        tag = f"kernels/{key}/tuned_speedup"
+        if sp is None:
+            failures.append(f"kernels/{key}: tuned_speedup missing")
+            continue
+        ok = sp >= 1.0
+        if not ok:
+            failures.append(
+                f"kernels/{key}: tuned config is {sp:.2f}x the default — "
+                f"the sweep selected a losing config")
+        rows.append((tag, 1.0, float(sp), None, "ok" if ok else "REGRESSED"))
+        b = base_cells.get(key, {}).get("tuned_us")
+        c = cell.get("tuned_us")
+        tag_us = f"kernels/{key}/tuned_us"
+        if b is None or c is None:
+            rows.append((tag_us, b, c, None, "new" if b is None else "info"))
+            continue
+        delta = (c - b) / b if b else 0.0
+        ok = c <= (1.0 + threshold) * b
+        if not ok:
+            failures.append(
+                f"kernels/{key}: tuned_us {c:.0f} vs baseline {b:.0f} "
+                f"({delta:+.1%} > +{threshold:.0%} gate)")
+        rows.append((tag_us, b, c, delta, "ok" if ok else "REGRESSED"))
+
+
 def compare(threshold: float = THRESHOLD) -> tuple[list[tuple], list[str]]:
     """-> (table rows: (metric, baseline, current, delta, status), failures)."""
     rows, failures = [], []
@@ -352,6 +410,8 @@ def compare(threshold: float = THRESHOLD) -> tuple[list[tuple], list[str]]:
             _gate_fleet(cur_data, base_data, rows, failures)
         if fname == "BENCH_sched.json":
             _gate_sched(cur_data, rows, failures)
+        if fname == "BENCH_kernels.json":
+            _gate_kernels(cur_data, base_data, rows, failures, threshold)
         for metric in sorted(set(base_g) | set(cur_g)):
             tag = f"{fname.removeprefix('BENCH_').removesuffix('.json')}" \
                   f"/{metric}"

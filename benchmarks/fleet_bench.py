@@ -124,8 +124,10 @@ def _run_one(n_clients: int, cohorts: str) -> dict:
 
 def bench_fleet():
     """Sweep fleet sizes in both fleet-state modes; emit BENCH_fleet.json."""
+    from benchmarks.common import bench_header
     rows = []
-    report: dict = {"sizes": list(SIZES), "rounds": ROUNDS,
+    report: dict = {"header": bench_header(), "sizes": list(SIZES),
+                    "rounds": ROUNDS,
                     "modes": {"per_client": {}, "cohort": {}},
                     "acc_parity": {}}
     # throwaway run so one-time jit compiles (edge merge, batched encode)

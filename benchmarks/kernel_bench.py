@@ -21,6 +21,8 @@ BENCH_INGEST_JSON = os.path.join(os.path.dirname(__file__),
                                  "BENCH_ingest.json")
 BENCH_DISPATCH_JSON = os.path.join(os.path.dirname(__file__),
                                    "BENCH_dispatch.json")
+BENCH_KERNELS_JSON = os.path.join(os.path.dirname(__file__),
+                                  "BENCH_kernels.json")
 
 
 def _ab_overhead(run_off, run_on, reps=9):
@@ -246,13 +248,20 @@ def bench_ingest():
         IngestBatcher, IngestSession, encode_update, make_wire_format,
     )
 
+    from benchmarks.common import bench_header
+    from repro.runtime.autotune import load_table
+
     rows = []
     K, P = 8, 1_000_000
     rng = np.random.default_rng(0)
     base = jnp.asarray(rng.normal(size=P).astype(np.float32))
     clients = [base + 0.1 * jnp.asarray(rng.normal(size=P).astype(np.float32))
                for _ in range(K)]
-    report: dict = {"K": K, "P": P, "schemes": {}, "buffer": {}}
+    report: dict = {"header": bench_header(), "K": K, "P": P,
+                    "schemes": {}, "buffer": {}}
+    # the shipped default tuning table: the cold-start verdicts every
+    # autotune='cache' server would run with on this chip class
+    tuned_table = load_table(prefer_user=False)
 
     for spec in ["f32", "bf16", "topk:0.1", "int8"]:
         fmt = make_wire_format(spec, chunk_elems=1 << 16)
@@ -277,15 +286,26 @@ def bench_ingest():
                 buf.commit(slot)
             return buf
 
-        def stream_all(batched=False, auto=False, tel=None):
+        def tuned_verdict(length, dtype, flush, _scheme=fmt.scheme):
+            hit = tuned_table.lookup("ingest", "bypass", dtype, _scheme,
+                                     int(length), int(flush))
+            if hit is None or hit.get("bypass") is None:
+                return None
+            return bool(hit["bypass"])
+
+        def stream_all(batched=False, auto=False, tel=None, tuned=False):
             # the *concurrent* multi-client path: K uploads interleave their
             # chunk streams — eager (one donated dispatch per chunk) vs the
             # double-buffered batch queue (one donated scatter per flush);
             # auto adds the startup probe that bypasses coalescing for
-            # scheme/size combos where the eager path wins
+            # scheme/size combos where the eager path wins, and tuned
+            # answers the same question from the shipped default tuning
+            # table (the autotune='cache' route — no startup probe)
             buf = UpdateBuffer(K, P, telemetry=tel)
             batcher = (IngestBatcher(buf, flush_chunks=16, auto_bypass=auto,
-                                     telemetry=tel)
+                                     telemetry=tel,
+                                     tuned_verdict=(tuned_verdict if tuned
+                                                    else None))
                        if batched else None)
             live = []
             for i, pl in enumerate(payloads):
@@ -324,6 +344,7 @@ def bench_ingest():
         dt, dt_co = timed(ingest_all, False), timed(ingest_all, True)
         dt_se, dt_sb = timed(stream_all, False), timed(stream_all, True)
         dt_sa = timed(stream_all, True, True)
+        dt_st = timed(stream_all, True, True, None, True)
         wire = sum(pl.nbytes for pl in payloads)
         decoded_mb = K * P * 4 / 2**20     # f32 params landed in the buffer
         ratio = (K * P * 4) / wire
@@ -353,6 +374,14 @@ def bench_ingest():
             # write strategy its own measurement says wins
             "stream_auto_MBps": round(decoded_mb / dt_sa, 1),
             "auto_vs_batched_speedup": round(dt_sb / dt_sa, 2),
+            # the shipped-default-table route: same write strategy question
+            # as auto, answered from the committed tuning cache instead of
+            # a startup probe.  tuned_flush_speedup is eager-vs-tuned: >= 1
+            # (within noise) means the table resolved the old
+            # batch_flush_speedup < 1 f32/bf16 regression — large raw
+            # chunks now route eager.
+            "stream_tuned_MBps": round(decoded_mb / dt_st, 1),
+            "tuned_flush_speedup": round(dt_se / dt_st, 2),
         }
 
         if spec == "topk:0.1":
@@ -449,6 +478,52 @@ def bench_ingest():
     return rows
 
 
+def bench_kernel_sweep():
+    """Autotuner sweep section -> BENCH_kernels.json: per (entry point,
+    dtype, P) cell, the hardcoded-default config vs the measured winner
+    (block_p sweep + XLA-oracle twin) and its measured-vs-roofline ratio.
+
+    On this container the Pallas kernels run in interpret mode, so the
+    oracle wins every cell by a wide margin — exactly the routing decision
+    ``autotune='cache'`` ships.  compare.py gates tuned >= default on every
+    swept cell (winner selection is by measured minimum, so a cell where
+    tuned loses means the sweep itself broke) and tuned_us against the
+    committed baseline at the usual 20% threshold.
+    """
+    from benchmarks.common import bench_header
+    from repro.runtime.autotune import AGG_ENTRY_POINTS, sweep_agg_entry
+
+    rows = []
+    K = 8
+    report: dict = {"header": bench_header(), "K": K, "cells": {}}
+    for entry in AGG_ENTRY_POINTS:
+        for dtype in ("float32", "bfloat16"):
+            for P in (1 << 16, 1 << 18):
+                r = sweep_agg_entry(entry, P, K, dtype, reps=2)
+                speedup = (r["default_us"] / r["tuned_us"]
+                           if r["tuned_us"] > 0 else float("inf"))
+                cell = {
+                    "default_us": r["default_us"],
+                    "tuned_us": r["tuned_us"],
+                    "tuned_speedup": round(speedup, 2),
+                    "use_oracle": r["use_oracle"],
+                    "block_p": r["block_p"],
+                    "predicted_us": r["predicted_us"],
+                    "measured_vs_predicted": r["measured_vs_predicted"],
+                }
+                key = f"{entry}/{dtype}/P{P}"
+                report["cells"][key] = cell
+                rows.append((f"tuner/{key}", f"{r['tuned_us']:.0f}",
+                             f"us_tuned;default={r['default_us']:.0f}us"
+                             f"({speedup:.1f}x);oracle={r['use_oracle']};"
+                             f"block_p={r['block_p']};"
+                             f"roofline_ratio={r['measured_vs_predicted']}"))
+    with open(BENCH_KERNELS_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(("tuner/report", "1", f"json={BENCH_KERNELS_JSON}"))
+    return rows
+
+
 def bench_dispatch():
     """Downlink dispatch: wire bytes per scheme (full snapshot vs delta),
     delta-hit rate vs history-ring depth, and decode+apply throughput.
@@ -468,7 +543,9 @@ def bench_dispatch():
     for v in range(1, 4):
         ring[v] = ring[v - 1] + 0.01 * jnp.asarray(
             rng.normal(size=P).astype(np.float32))
-    report: dict = {"P": P, "schemes": {}, "delta_hit_rate": {}}
+    from benchmarks.common import bench_header
+    report: dict = {"header": bench_header(), "P": P, "schemes": {},
+                    "delta_hit_rate": {}}
 
     for spec in ["f32", "bf16", "topk:0.1", "int8"]:
         sess = DispatchSession(make_wire_format(spec, 1 << 16), history=4)

@@ -7,11 +7,12 @@ Prints ``name,value,derived`` CSV.  Sections:
                                     roofline accounting
   roofline/*                      — per (arch x shape) roofline terms from
                                     the multi-pod dry-run artifacts
-  ingest/* + dispatch/*           — wire-path benchmarks (--only wire): the
-                                    subset CI's regression gate runs; both
-                                    local runs and the `ingest-bench` job go
-                                    through this one entrypoint so their
-                                    numbers come from the same code path
+  ingest/* + dispatch/* + tuner/* — wire-path + autotune-sweep benchmarks
+                                    (--only wire): the subset CI's
+                                    regression gate runs; both local runs
+                                    and the `ingest-bench` job go through
+                                    this one entrypoint so their numbers
+                                    come from the same code path
   fleet/*                         — cohort fleet-size sweep (--only fleet):
                                     server resident state + per-round wall
                                     clock vs 10^2..10^5 simulated clients,
@@ -67,9 +68,11 @@ def main() -> None:
               flush=True)
         return
     if args.only == "wire":
-        from benchmarks.kernel_bench import bench_dispatch, bench_ingest
+        from benchmarks.kernel_bench import (
+            bench_dispatch, bench_ingest, bench_kernel_sweep,
+        )
         failed = False
-        for bench in (bench_ingest, bench_dispatch):
+        for bench in (bench_ingest, bench_dispatch, bench_kernel_sweep):
             try:
                 for name, value, derived in bench():
                     print(f"{name},{value},{derived}", flush=True)

@@ -121,8 +121,10 @@ def _run_one(clients, params0, eval_fn, scen_kwargs: dict, policy: str,
 
 def bench_sched():
     """-> CSV rows (name, value, derived); writes BENCH_sched.json."""
+    from benchmarks.common import bench_header
     clients, params0, eval_fn = _build_workload()
     report = {
+        "header": bench_header(),
         "workload": {
             "dataset": "tiny", "model": "mlp", "n_clients": N_CLIENTS,
             "concurrency": 6, "buffer_size": 4, "staleness_limit": None,

@@ -139,7 +139,8 @@ class FLConfig:
     # outputs bit-identical — the cohorts='off' discipline).
     telemetry: bool = False
     # opt-in kernel wall timings: block_until_ready around each seafl_agg
-    # aggregate call (changes device-dispatch overlap, never values)
+    # aggregate call and each codec encode/decode (changes device-dispatch
+    # overlap, never values) — the same clock the autotuner sweeps with
     telemetry_kernels: bool = False
     # run-health monitor (runtime/monitor.py): 'on' runs the online
     # anomaly detectors (plateau, staleness blowup, straggler dominance,
@@ -163,6 +164,16 @@ class FLConfig:
     # 'rate_staleness' rank eligible clients by predicted round time
     # (+ predicted staleness) from observed dispatch->deliver EMAs.
     scheduler: str = "random"
+    # per-chip kernel tuning (runtime/autotune.py): 'off' (default) runs
+    # the hardcoded block_p / chunk_elems / ingest defaults, bit-identical
+    # to the untuned tree (pinned in tests/test_autotune.py).  'cache'
+    # applies the winners from the user tuning cache (~/.cache) or the
+    # repo-committed default table — no measurement at construction.
+    # 'sweep' measures this server's actual shapes first (block-until-ready
+    # sweeps over block_p / chunk_elems / ingest bypass), persists the
+    # winners to the user cache, then applies them.  Tuned configs change
+    # timing only, never values (parity pinned <= 1e-6).
+    autotune: str = "off"
     seed: int = 0
 
     def hyper(self) -> SeaflHyper:
@@ -215,6 +226,25 @@ class SeaflServer:
         self._flat = self.packer.pack(params)          # current global, (P,)
         self.round = 0
         self.wire = make_wire_format(cfg.compression, cfg.chunk_elems)
+        if cfg.autotune not in ("off", "cache", "sweep"):
+            raise ValueError(f"autotune must be 'off', 'cache' or 'sweep', "
+                             f"got {cfg.autotune!r}")
+        # per-chip tuning: resolved once at construction.  'off' keeps the
+        # tuner out of every code path (self.tuning is None and nothing
+        # below consults it) — the bit-identity pin.  A tuned chunk_elems
+        # rebuilds the wire format, so uplink chunking itself is swept.
+        self.tuning = None
+        if cfg.autotune != "off":
+            from repro.runtime.autotune import ServerTuning
+            self.tuning = ServerTuning.build(
+                cfg.autotune, p=self.packer.size, k=self._trigger_size(),
+                dtype=BUFFER_DTYPES[cfg.buffer_dtype],
+                scheme=self.wire.scheme, algorithm=cfg.algorithm,
+                chunk_elems=cfg.chunk_elems,
+                flush_chunks=cfg.ingest_batch_chunks, telemetry=self.tel)
+            ce = self.tuning.chunk_elems(cfg.chunk_elems)
+            if ce != self.wire.chunk_elems:
+                self.wire = make_wire_format(cfg.compression, ce)
         if cfg.dispatch_resync_mode not in RESYNC_MODES:
             raise ValueError(f"dispatch_resync_mode must be one of "
                              f"{RESYNC_MODES}, got "
@@ -254,13 +284,12 @@ class SeaflServer:
         self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size,
                                    dtype=self._buffer_dtype,
                                    telemetry=self.tel)
-        self._batcher = (IngestBatcher(self.buffer, cfg.ingest_batch_chunks,
-                                       auto_bypass=cfg.ingest_auto_bypass,
-                                       telemetry=self.tel)
-                         if cfg.ingest_batch_chunks > 0 else None)
+        self._batcher = self._make_batcher()
         if self.tel.enabled and cfg.telemetry_kernels:
             from repro.kernels.seafl_agg.ops import set_kernel_timing
+            from repro.runtime.codecs import set_codec_timing
             set_kernel_timing(self.tel)
+            set_codec_timing(self.tel)
         # two-tier edge aggregation (cohorts='on'): same-version uploads
         # pre-combine into one resident (P,) partial per version, so the
         # buffer holds O(live versions) slots regardless of how many
@@ -285,6 +314,23 @@ class SeaflServer:
         self._ingests: dict[int, IngestSession] = {}   # cid -> mid-stream
 
     # ------------------------------------------------------------- plumbing
+    def _make_batcher(self) -> Optional[IngestBatcher]:
+        """Ingest batcher over the current buffer, tuning-aware: a cached
+        bypass verdict answers without the startup probe, and the swept
+        flush size replaces the configured one.  With tuning off this is
+        exactly the pre-autotune construction."""
+        cfg = self.cfg
+        if cfg.ingest_batch_chunks <= 0:
+            return None
+        flush = cfg.ingest_batch_chunks
+        verdict = None
+        if self.tuning is not None:
+            flush = self.tuning.ingest_flush_chunks(flush)
+            verdict = self.tuning.ingest_verdict
+        return IngestBatcher(self.buffer, flush,
+                             auto_bypass=cfg.ingest_auto_bypass,
+                             telemetry=self.tel, tuned_verdict=verdict)
+
     def _trigger_size(self) -> int:
         if self.cfg.algorithm == "fedavg":
             return self.cfg.concurrency
@@ -667,16 +713,24 @@ class SeaflServer:
         stacked = self.buffer.stacked_flat()   # f32 or bf16 slots; kernels
         weights = None                         # accumulate in f32 either way
 
+        # tuning plans (None with autotune='off' — the entry points then
+        # dispatch byte-for-byte like the untuned tree): the baselines ride
+        # the raw fused pass, seafl/seafl2 the delta-free fused hot path
+        tuned_w = tuned_s = None
+        if self.tuning is not None:
+            tuned_w = self.tuning.agg_plan("weighted_aggregate")
+            tuned_s = self.tuning.agg_plan("seafl_aggregate_flat_from_params")
+
         with self.tel.span("server.aggregate", round=self.round,
                            k=len(updates), algorithm=cfg.algorithm):
             if cfg.algorithm == "fedavg":
                 self._flat, w = fedavg_aggregate_flat(
-                    self._flat, stacked, jnp.asarray(sizes))
+                    self._flat, stacked, jnp.asarray(sizes), tuned=tuned_w)
                 weights = np.asarray(w)
             elif cfg.algorithm == "fedasync":
                 self._flat = fedasync_aggregate_flat(
                     self._flat, stacked[0], staleness[0],
-                    cfg.fedasync_alpha0, cfg.fedasync_poly_a)
+                    cfg.fedasync_alpha0, cfg.fedasync_poly_a, tuned=tuned_w)
             elif cfg.algorithm == "fedbuff":
                 # fedbuff_aggregate_flat yields w_t + eta*mean(w_k - w_t);
                 # true FedBuff deltas are vs each client's dispatch version,
@@ -684,7 +738,8 @@ class SeaflServer:
                 # the few distinct live versions, not another (K, P) pass.
                 g, k = self._flat, float(len(updates))
                 mixed, w = fedbuff_aggregate_flat(g, stacked,
-                                                  cfg.fedbuff_eta_g)
+                                                  cfg.fedbuff_eta_g,
+                                                  tuned=tuned_w)
                 counts: dict[int, int] = {}
                 for u in updates:
                     counts[u.version] = counts.get(u.version, 0) + 1
@@ -705,7 +760,7 @@ class SeaflServer:
                     self._flat, stacked, jnp.asarray(sizes),
                     jnp.asarray(staleness), h.alpha, h.mu, h.beta, h.theta,
                     use_importance=h.use_importance,
-                    use_staleness=h.use_staleness)
+                    use_staleness=h.use_staleness, tuned=tuned_s)
                 weights = np.asarray(w)
 
         if self.tel.enabled:
@@ -968,11 +1023,7 @@ class SeaflServer:
         self.buffer = UpdateBuffer(self._trigger_size(), self.packer.size,
                                    dtype=self._buffer_dtype,
                                    telemetry=self.tel)
-        self._batcher = (IngestBatcher(self.buffer,
-                                       self.cfg.ingest_batch_chunks,
-                                       auto_bypass=self.cfg.ingest_auto_bypass,
-                                       telemetry=self.tel)
-                         if self.cfg.ingest_batch_chunks > 0 else None)
+        self._batcher = self._make_batcher()
         for i, m in enumerate(state.get("buffer", [])):
             self.buffer.add(
                 Update(client_id=int(m["client_id"]),

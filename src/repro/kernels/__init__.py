@@ -8,6 +8,14 @@ Each kernel package contains:
 On this CPU container kernels are validated with interpret=True; the
 XLA paths in models/ and core/ are the default execution route (see
 DESIGN.md §7 — hardware-adaptation notes).
+
+``INTERPRET`` used to be a hand-flipped constant; it is now resolved at
+import from the active jax backend (compiled Pallas on real TPUs,
+interpret everywhere Mosaic cannot lower).  Per-entry-point overrides —
+including falling back to the XLA oracle in ``ref.py`` when the compiled
+kernel loses or fails to lower — come from ``runtime/autotune.py``.
 """
 
-INTERPRET = True  # flipped to False on real TPU deployments
+from repro.runtime.autotune import resolve_interpret
+
+INTERPRET = resolve_interpret()

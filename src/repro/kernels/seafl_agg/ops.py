@@ -12,6 +12,14 @@ aggregate entry point block until its result is ready and record the wall
 time as a ``kernel.<name>_us`` histogram — the hook the per-chip autotuner
 builds on.  Off (the default) the entry points return un-synchronised like
 any jitted call: device overlap, values, and dtypes are untouched.
+
+Tuned routing (opt-in): each public wrapper accepts ``tuned=`` — a plan
+dict from ``runtime/autotune.py`` (``{'use_oracle': bool, 'block_p':
+int}``).  ``use_oracle`` dispatches to a jitted XLA twin built on
+``ref.py`` (the per-entry-point fallback for backends where the Pallas
+kernel loses or fails to lower); otherwise the swept ``block_p`` is
+applied.  Without ``tuned`` (or with ``tuned=None``) the call is
+byte-for-byte the untuned path — the ``autotune='off'`` bit-identity pin.
 """
 from __future__ import annotations
 
@@ -26,6 +34,7 @@ from repro.core.aggregation import (
     SeaflHyper, cosine_from_partials, seafl_weights,
 )
 from repro.kernels import INTERPRET
+from repro.kernels.seafl_agg import ref as _ref
 from repro.kernels.seafl_agg.kernel import (
     similarity_partials_call, similarity_partials_from_params_call,
     weighted_agg_call,
@@ -53,6 +62,23 @@ def _timed(name: str, fn, *args, **kw):
     out = jax.block_until_ready(fn(*args, **kw))
     tel.histogram(f"kernel.{name}_us", (time.perf_counter() - t0) * 1e6)
     return out
+
+
+def _route(name: str, jit_body, oracle_body, *args, **kw):
+    """Dispatch one public entry point through its tuning plan.
+
+    ``tuned=None`` (the default everywhere) leaves args, kwargs, and the
+    callee untouched — identical dispatch to the pre-autotune tree."""
+    tuned = kw.pop("tuned", None)
+    if tuned:
+        if tuned.get("use_oracle"):
+            kw.pop("block_p", None)
+            kw.pop("interpret", None)
+            return _timed(name, oracle_body, *args, **kw)
+        bp = tuned.get("block_p")
+        if bp:
+            kw.setdefault("block_p", int(bp))
+    return _timed(name, jit_body, *args, **kw)
 
 
 def _pad_to(x, m, axis=-1):
@@ -94,6 +120,15 @@ def weighted_aggregate(weights, stacked, global_flat, theta,
     return out[:P]
 
 
+# XLA-oracle twins of the raw entry points: the same math via ref.py,
+# jitted.  These are what the autotuner times against the Pallas path and
+# what tuned routing dispatches to when the kernel loses on a backend.
+_similarity_partials_oracle = jax.jit(_ref.similarity_partials_ref)
+_similarity_partials_from_params_oracle = jax.jit(
+    _ref.similarity_partials_from_params_ref)
+_weighted_aggregate_oracle = jax.jit(_ref.weighted_agg_ref)
+
+
 def _seafl_weights_flat(cos, data_sizes, staleness, alpha, mu, beta,
                         use_importance=True, use_staleness=True):
     """Eq. (4)+(6) via the single weight-rule implementation in
@@ -126,11 +161,25 @@ def _seafl_aggregate_flat_jit(global_flat, stacked_params, stacked_deltas,
     return new_global, p
 
 
+@partial(jax.jit, static_argnames=("use_importance", "use_staleness"))
+def _seafl_aggregate_flat_oracle(global_flat, stacked_params, stacked_deltas,
+                                 data_sizes, staleness, alpha, mu, beta,
+                                 theta, use_importance=True,
+                                 use_staleness=True):
+    """XLA twin of ``_seafl_aggregate_flat_jit``: ref partials + the same
+    weight rule + ref weighted mix (parity <=1e-6 by tests)."""
+    part = _ref.similarity_partials_ref(stacked_deltas, global_flat)
+    cos = cosine_from_partials(part[:, 0], part[:, 1], part[:, 2])
+    p = _seafl_weights_flat(cos, data_sizes, staleness, alpha, mu, beta,
+                            use_importance, use_staleness)
+    return _ref.weighted_agg_ref(p, stacked_params, global_flat, theta), p
+
+
 def seafl_aggregate_flat(*args, **kw):
     """Fused flat-buffer SEAFL aggregation, explicit deltas (see the jitted
-    body) — timed when kernel timing is installed."""
-    return _timed("seafl_aggregate_flat", _seafl_aggregate_flat_jit,
-                  *args, **kw)
+    body) — timed when kernel timing is installed, routed when ``tuned=``."""
+    return _route("seafl_aggregate_flat", _seafl_aggregate_flat_jit,
+                  _seafl_aggregate_flat_oracle, *args, **kw)
 
 
 @partial(jax.jit, static_argnames=("use_importance", "use_staleness",
@@ -159,11 +208,28 @@ def _seafl_aggregate_flat_from_params_jit(global_flat, stacked_params,
     return new_global, p
 
 
+@partial(jax.jit, static_argnames=("use_importance", "use_staleness"))
+def _seafl_aggregate_flat_from_params_oracle(global_flat, stacked_params,
+                                             data_sizes, staleness, alpha,
+                                             mu, beta, theta,
+                                             use_importance=True,
+                                             use_staleness=True):
+    """XLA twin of the delta-free server hot path."""
+    part = _ref.similarity_partials_from_params_ref(stacked_params,
+                                                    global_flat)
+    cos = cosine_from_partials(part[:, 0], part[:, 1], part[:, 2])
+    p = _seafl_weights_flat(cos, data_sizes, staleness, alpha, mu, beta,
+                            use_importance, use_staleness)
+    return _ref.weighted_agg_ref(p, stacked_params, global_flat, theta), p
+
+
 def seafl_aggregate_flat_from_params(*args, **kw):
     """Delta-free fused SEAFL aggregation: the server hot path (see the
-    jitted body) — timed when kernel timing is installed."""
-    return _timed("seafl_aggregate_flat_from_params",
-                  _seafl_aggregate_flat_from_params_jit, *args, **kw)
+    jitted body) — timed when kernel timing is installed, routed when
+    ``tuned=``."""
+    return _route("seafl_aggregate_flat_from_params",
+                  _seafl_aggregate_flat_from_params_jit,
+                  _seafl_aggregate_flat_from_params_oracle, *args, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -183,9 +249,17 @@ def _fedavg_aggregate_flat_jit(global_flat, stacked_params, data_sizes,
     return new_global, w
 
 
+@jax.jit
+def _fedavg_aggregate_flat_oracle(global_flat, stacked_params, data_sizes):
+    n = data_sizes.astype(jnp.float32)
+    w = n / jnp.maximum(jnp.sum(n), 1.0)
+    return _ref.weighted_agg_ref(w, stacked_params, global_flat,
+                                 jnp.float32(1.0)), w
+
+
 def fedavg_aggregate_flat(*args, **kw):
-    return _timed("fedavg_aggregate_flat", _fedavg_aggregate_flat_jit,
-                  *args, **kw)
+    return _route("fedavg_aggregate_flat", _fedavg_aggregate_flat_jit,
+                  _fedavg_aggregate_flat_oracle, *args, **kw)
 
 
 @partial(jax.jit, static_argnames=("block_p", "interpret"))
@@ -201,9 +275,17 @@ def _fedbuff_aggregate_flat_jit(global_flat, stacked_params, eta_g,
     return new_global, w
 
 
+@jax.jit
+def _fedbuff_aggregate_flat_oracle(global_flat, stacked_params, eta_g):
+    K = stacked_params.shape[0]
+    w = jnp.full((K,), 1.0 / K, jnp.float32)
+    return _ref.weighted_agg_ref(w, stacked_params, global_flat,
+                                 jnp.asarray(eta_g, jnp.float32)), w
+
+
 def fedbuff_aggregate_flat(*args, **kw):
-    return _timed("fedbuff_aggregate_flat", _fedbuff_aggregate_flat_jit,
-                  *args, **kw)
+    return _route("fedbuff_aggregate_flat", _fedbuff_aggregate_flat_jit,
+                  _fedbuff_aggregate_flat_oracle, *args, **kw)
 
 
 @partial(jax.jit, static_argnames=("block_p", "interpret"))
@@ -219,6 +301,15 @@ def _fedasync_aggregate_flat_jit(global_flat, client_flat, staleness,
                               interpret=interpret)
 
 
+@jax.jit
+def _fedasync_aggregate_flat_oracle(global_flat, client_flat, staleness,
+                                    alpha0=0.6, a=0.5):
+    alpha = (jnp.asarray(alpha0, jnp.float32)
+             * (1.0 + jnp.asarray(staleness, jnp.float32)) ** (-a))
+    return _ref.weighted_agg_ref(jnp.ones((1,), jnp.float32),
+                                 client_flat[None], global_flat, alpha)
+
+
 def fedasync_aggregate_flat(*args, **kw):
-    return _timed("fedasync_aggregate_flat", _fedasync_aggregate_flat_jit,
-                  *args, **kw)
+    return _route("fedasync_aggregate_flat", _fedasync_aggregate_flat_jit,
+                  _fedasync_aggregate_flat_oracle, *args, **kw)

@@ -50,7 +50,7 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                 cohorts: str = "off", resync_batching: bool = False,
                 telemetry: bool = False, telemetry_kernels: bool = False,
                 monitor: str = "off", slo=None, monitor_byte_budget=None,
-                scheduler: str = "random"):
+                scheduler: str = "random", autotune: str = "off"):
     cfg = smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg)
     params0 = model.init(jax.random.PRNGKey(seed))
@@ -103,7 +103,7 @@ def build_lm_fl(arch: str, *, smoke: bool = True, n_clients: int = 8,
                   telemetry=telemetry, telemetry_kernels=telemetry_kernels,
                   monitor=monitor, slo=slo,
                   monitor_byte_budget=monitor_byte_budget,
-                  scheduler=scheduler)
+                  scheduler=scheduler, autotune=autotune)
     server = SeaflServer(fl, params0, {c.cid: c.n_samples
                                        for c in clients.values()})
 
@@ -359,6 +359,13 @@ def main():
                          "policies order eligible clients by predicted "
                          "round time (+ predicted staleness) with "
                          "fairness aging")
+    ap.add_argument("--autotune", default="off",
+                    choices=["off", "cache", "sweep"],
+                    help="per-chip kernel tuning (runtime/autotune.py): "
+                         "'off' runs the hardcoded defaults (bit-identical "
+                         "pin); 'cache' applies the user-cache / committed "
+                         "default-table winners; 'sweep' measures this "
+                         "run's shapes first and persists the winners")
     args = ap.parse_args()
     if args.slo is not None:
         args.monitor = "on"
@@ -388,7 +395,7 @@ def main():
         telemetry_kernels=args.telemetry_kernels,
         monitor=args.monitor, slo=args.slo,
         monitor_byte_budget=args.byte_budget,
-        scheduler=args.scheduler)
+        scheduler=args.scheduler, autotune=args.autotune)
 
     ck = None
     if args.ckpt_dir:

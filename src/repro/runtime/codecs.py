@@ -52,6 +52,7 @@ __all__ = [
     "WireFormat",
     "parse_spec",
     "make_wire_format",
+    "set_codec_timing",
     "encode_chunk",
     "decode_chunk",
     "decode_concat",
@@ -372,18 +373,46 @@ def make_wire_format(spec: Optional[str],
 
 # --------------------------------------------------------- chunk plumbing
 
+# Opt-in codec wall timing (FLConfig.telemetry_kernels): the same
+# block-until-ready ``kernel.<name>_us`` histogram discipline as the
+# aggregate entry points in kernels/seafl_agg/ops.py, so the autotuner and
+# the Perfetto trace see encode/decode on the same clock.  None / disabled
+# (the default) leaves encode/decode un-synchronised and untouched.
+_KERNEL_TEL = None
+
+
+def set_codec_timing(telemetry: Optional[object]) -> None:
+    """Install (or clear, with None) the Telemetry that times
+    encode_chunk/decode_chunk.  Process-wide by design, like
+    ``set_kernel_timing``: a measurement mode, not protocol state."""
+    global _KERNEL_TEL
+    _KERNEL_TEL = telemetry
+
+
+def _timed(name: str, fn, *args):
+    tel = _KERNEL_TEL
+    if tel is None or not getattr(tel, "enabled", False):
+        return fn(*args)
+    import time
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(*args))
+    tel.histogram(f"kernel.{name}_us", (time.perf_counter() - t0) * 1e6)
+    return out
+
+
 def encode_chunk(x: jnp.ndarray, seq: int, start: int,
                  fmt: WireFormat) -> Chunk:
     """Encode one (n,) f32 window of the flat vector."""
     n = int(x.shape[0])
+    payload = _timed(f"encode_{fmt.scheme}", fmt.codec.encode, x, fmt)
     return Chunk(seq=seq, start=start, length=n,
-                 payload=fmt.codec.encode(x, fmt),
-                 nbytes=fmt.chunk_wire_bytes(n))
+                 payload=payload, nbytes=fmt.chunk_wire_bytes(n))
 
 
 def decode_chunk(chunk: Chunk, fmt: WireFormat) -> jnp.ndarray:
     """Decode one chunk back to its (length,) f32 window."""
-    return fmt.codec.decode(chunk.payload, chunk.length, fmt)
+    return _timed(f"decode_{fmt.scheme}", fmt.codec.decode,
+                  chunk.payload, chunk.length, fmt)
 
 
 def decode_concat(chunks: list[Chunk], fmt: WireFormat) -> jnp.ndarray:

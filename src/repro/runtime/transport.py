@@ -186,12 +186,17 @@ class IngestBatcher:
 
     def __init__(self, buffer, flush_chunks: int = 16,
                  auto_bypass: bool = False,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 tuned_verdict=None):
         self.tel = _tel_of(telemetry)
         self.buffer = buffer
         self.flush_chunks = max(1, int(flush_chunks))
         self.auto_bypass = bool(auto_bypass)
-        self._bypass: Optional[bool] = None   # probe verdict, decided once
+        # tuned_verdict: (length, dtype, flush_chunks) -> Optional[bool],
+        # the autotuner's cached bypass answer.  None (no tuner, or a cache
+        # miss) falls through to the one-shot timing probe below.
+        self.tuned_verdict = tuned_verdict
+        self._bypass: Optional[bool] = None   # verdict, decided once
         self._fill: list[tuple[int, int, jnp.ndarray]] = []
         self.flushes = 0
         self.chunks_batched = 0
@@ -205,9 +210,14 @@ class IngestBatcher:
     def enqueue(self, slot: int, start: int, vals: jnp.ndarray) -> None:
         if self.auto_bypass and int(vals.shape[0]) >= _BYPASS_MIN_ELEMS:
             if self._bypass is None:
-                self._bypass = _coalescing_loses(
-                    int(vals.shape[0]), self.buffer.dtype,
-                    self.flush_chunks)
+                if self.tuned_verdict is not None:
+                    self._bypass = self.tuned_verdict(
+                        int(vals.shape[0]), self.buffer.dtype,
+                        self.flush_chunks)
+                if self._bypass is None:      # tuning-cache miss -> probe
+                    self._bypass = _coalescing_loses(
+                        int(vals.shape[0]), self.buffer.dtype,
+                        self.flush_chunks)
                 self.tel.gauge("ingest.bypass_verdict",
                                1.0 if self._bypass else 0.0)
             if self._bypass:
